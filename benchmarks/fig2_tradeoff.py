@@ -1,0 +1,47 @@
+"""Paper Fig. 2: latency vs carbon-efficiency trade-off.
+
+Paper claims: CE-Green 245.8 inf/gCO2 vs monolithic 189.5 (1.30x);
+CE-Performance 149.6; all CE modes within ~7% latency of monolithic.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+PAPER_EFF = {"monolithic": 189.5, "ce-performance": 149.6, "ce-green": 245.8}
+
+
+def run(model: str = "mobilenetv2"):
+    mono = common.run_monolithic(model)
+    rows = {"monolithic": mono,
+            "ce-performance": common.run_mode(model, "performance"),
+            "ce-balanced": common.run_mode(model, "balanced"),
+            "ce-green": common.run_mode(model, "green")}
+    out = {}
+    for name, r in rows.items():
+        t = r["totals"]
+        out[name] = {
+            "latency_ms": t["avg_latency_ms"],
+            "carbon_eff_inf_per_g": t["carbon_efficiency_inf_per_g"],
+            "latency_overhead_pct": 100.0 * (t["avg_latency_ms"]
+                                             / mono["totals"]["avg_latency_ms"] - 1.0),
+        }
+    out["improvement_x"] = (out["ce-green"]["carbon_eff_inf_per_g"]
+                            / out["monolithic"]["carbon_eff_inf_per_g"])
+    return out
+
+
+def main():
+    out = run()
+    impr = out.pop("improvement_x")
+    print(f"{'config':16s} {'lat(ms)':>8s} {'inf/gCO2':>9s} {'lat ovh%':>9s} {'paper':>7s}")
+    for name, r in out.items():
+        p = PAPER_EFF.get(name, float('nan'))
+        print(f"{name:16s} {r['latency_ms']:8.2f} {r['carbon_eff_inf_per_g']:9.1f} "
+              f"{r['latency_overhead_pct']:9.2f} {p:7.1f}")
+    print(f"green/mono carbon-efficiency improvement: {impr:.2f}x (paper 1.30x)")
+    out["improvement_x"] = impr
+    return out
+
+
+if __name__ == "__main__":
+    main()

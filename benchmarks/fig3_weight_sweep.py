@@ -1,0 +1,38 @@
+"""Paper Fig. 3: carbon-weight sweep; transition to green at w_C >= 0.50."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(model: str = "mobilenetv2", points=None):
+    points = points if points is not None else np.arange(0.0, 0.95, 0.05)
+    mono = common.run_monolithic(model)
+    rows = []
+    for w_c in points:
+        r = common.run_sweep_point(model, float(w_c))
+        dist = r["distribution"]
+        rows.append({
+            "w_c": round(float(w_c), 2),
+            "green_share_pct": dist["node-green"],
+            "carbon_g_per_inf": r["totals"]["carbon_g_per_inf"],
+            "latency_ms": r["totals"]["avg_latency_ms"],
+            "reduction_pct": common.reduction_vs_mono(model, r, mono),
+        })
+    transition = next((r["w_c"] for r in rows if r["green_share_pct"] > 50.0), None)
+    return {"rows": rows, "transition_w_c": transition}
+
+
+def main():
+    out = run()
+    print(f"{'w_C':>5s} {'green%':>7s} {'gCO2/inf':>9s} {'red%':>6s}")
+    for r in out["rows"]:
+        print(f"{r['w_c']:5.2f} {r['green_share_pct']:7.0f} "
+              f"{r['carbon_g_per_inf']:9.5f} {r['reduction_pct']:6.1f}")
+    print(f"transition at w_C = {out['transition_w_c']} (paper: >= 0.50)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

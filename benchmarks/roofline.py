@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh: str = "16x16"):
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if "account" not in d:
+            continue
+        a = d["account"]
+        r = a["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"],
+            "swa_variant": d.get("swa_variant", False),
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "bottleneck": r["bottleneck"],
+            "step_time_s": r["step_time_s"],
+            "model_flops": a["model_flops"],
+            "hlo_flops": a["hlo_flops_total"],
+            "flops_ratio": a["model_to_hlo_flops_ratio"],
+            "collective_bytes": a["collective_bytes_total"],
+            "compile_s": d["full"]["compile_s"],
+        })
+    return rows
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts yet (run repro.launch.dryrun --all)")
+        return []
+    print(f"{'arch':18s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'bneck':>10s} {'MF/HLO':>7s}")
+    for r in rows:
+        v = " (swa)" if r["swa_variant"] else ""
+        print(f"{r['arch']:18s} {r['shape']+v:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{r['bottleneck']:>10s} {r['flops_ratio'] or 0:7.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

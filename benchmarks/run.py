@@ -1,0 +1,62 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver.
+
+``us_per_call`` is the per-inference (or per-task) latency of the measured
+configuration; ``derived`` is that table's headline metric vs the paper.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (fig2_tradeoff, fig3_weight_sweep, overhead,
+                            roofline, table2_carbon_footprint,
+                            table4_multi_model, table5_node_distribution,
+                            temporal_shifting)
+
+    rows = []
+
+    t2 = table2_carbon_footprint.run()
+    rows.append(("table2_green_carbon_reduction",
+                 t2["ce-green"]["latency_ms"] * 1e3,
+                 f"reduction_pct={t2['ce-green']['reduction_vs_mono_pct']:.1f}"))
+
+    t4 = table4_multi_model.run()
+    for model, r in t4.items():
+        rows.append((f"table4_{model}", r["green_latency_ms"] * 1e3,
+                     f"reduction_pct={r['reduction_pct']:.1f}"))
+
+    t5 = table5_node_distribution.run()
+    rows.append(("table5_green_node_share", 0.0,
+                 f"green_mode_green_node_pct={t5['green']['node-green']:.0f}"))
+
+    f2 = fig2_tradeoff.run()
+    rows.append(("fig2_carbon_efficiency",
+                 f2["ce-green"]["latency_ms"] * 1e3,
+                 f"improvement_x={f2['improvement_x']:.2f}"))
+
+    f3 = fig3_weight_sweep.run()
+    rows.append(("fig3_weight_sweep", 0.0,
+                 f"transition_w_c={f3['transition_w_c']}"))
+
+    ov = overhead.run()
+    rows.append(("scheduler_overhead_per_task", ov["per_task_ms"] * 1e3,
+                 "paper_us=30"))
+    rows.append(("scheduler_vectorised_100k_nodes", ov["vector_100k_nodes_us"],
+                 f"ns_per_node={ov['vector_ns_per_node']:.1f}"))
+
+    ts = temporal_shifting.run(deadlines=(16.0,))
+    rows.append(("beyond_paper_temporal_shifting", 0.0,
+                 f"savings_pct={ts[0]['savings_pct']:.1f}"))
+
+    for r in roofline.load():
+        rows.append((f"roofline_{r['arch']}_{r['shape']}",
+                     r["step_time_s"] * 1e6,
+                     f"bottleneck={r['bottleneck']}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table II: carbon footprint comparison (MobileNetV2).
+
+Monolithic / AMP4EC / CE-Performance / CE-Balanced / CE-Green.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+PAPER = {  # configuration -> (latency_ms, carbon_g_per_inf)
+    "monolithic": (254.85, 0.0053),
+    "amp4ec": (277.22, 0.0056),
+    "ce-performance": (271.38, 0.0067),
+    "ce-balanced": (271.11, 0.0066),
+    "ce-green": (272.02, 0.0041),
+}
+
+
+def run(model: str = "mobilenetv2"):
+    mono = common.run_monolithic(model)
+    rows = {"monolithic": mono,
+            "amp4ec": common.run_amp4ec(model),
+            "ce-performance": common.run_mode(model, "performance"),
+            "ce-balanced": common.run_mode(model, "balanced"),
+            "ce-green": common.run_mode(model, "green")}
+    out = {}
+    for name, r in rows.items():
+        t = r["totals"]
+        out[name] = {
+            "latency_ms": t["avg_latency_ms"],
+            "throughput_rps": t["throughput_rps"],
+            "carbon_g_per_inf": t["carbon_g_per_inf"],
+            "reduction_vs_mono_pct": common.reduction_vs_mono(model, r, mono),
+            "paper_latency_ms": PAPER[name][0],
+            "paper_carbon": PAPER[name][1],
+        }
+    return out
+
+
+def main():
+    out = run()
+    print(f"{'config':16s} {'lat(ms)':>8s} {'rps':>6s} {'gCO2/inf':>9s} "
+          f"{'red%':>7s} {'paper gCO2':>10s}")
+    for name, r in out.items():
+        print(f"{name:16s} {r['latency_ms']:8.2f} {r['throughput_rps']:6.2f} "
+              f"{r['carbon_g_per_inf']:9.5f} {r['reduction_vs_mono_pct']:7.1f} "
+              f"{r['paper_carbon']:10.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

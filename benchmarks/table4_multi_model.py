@@ -1,0 +1,38 @@
+"""Paper Table IV: multi-model carbon footprint (V2 / V4 / B0)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+PAPER_REDUCTION = {"mobilenetv2": 22.9, "mobilenetv4": 14.8,
+                   "efficientnet-b0": 32.2}
+
+
+def run():
+    out = {}
+    for model in common.CALIBRATION:
+        mono = common.run_monolithic(model)
+        green = common.run_mode(model, "green")
+        out[model] = {
+            "mono_latency_ms": mono["totals"]["avg_latency_ms"],
+            "mono_carbon": mono["totals"]["carbon_g_per_inf"],
+            "green_latency_ms": green["totals"]["avg_latency_ms"],
+            "green_carbon": green["totals"]["carbon_g_per_inf"],
+            "reduction_pct": common.reduction_vs_mono(model, green, mono),
+            "paper_reduction_pct": PAPER_REDUCTION[model],
+        }
+    return out
+
+
+def main():
+    out = run()
+    print(f"{'model':16s} {'mono ms':>8s} {'mono g':>8s} {'green ms':>9s} "
+          f"{'green g':>8s} {'red%':>6s} {'paper%':>7s}")
+    for m, r in out.items():
+        print(f"{m:16s} {r['mono_latency_ms']:8.2f} {r['mono_carbon']:8.5f} "
+              f"{r['green_latency_ms']:9.2f} {r['green_carbon']:8.5f} "
+              f"{r['reduction_pct']:6.1f} {r['paper_reduction_pct']:7.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Table V: node usage distribution per scheduling mode."""
+from __future__ import annotations
+
+from benchmarks import common
+
+PAPER = {
+    "performance": {"node-high": 100.0, "node-medium": 0.0, "node-green": 0.0},
+    "balanced": {"node-high": 100.0, "node-medium": 0.0, "node-green": 0.0},
+    "green": {"node-high": 0.0, "node-medium": 0.0, "node-green": 100.0},
+}
+
+
+def run(model: str = "mobilenetv2"):
+    return {mode: common.run_mode(model, mode)["distribution"]
+            for mode in ("performance", "balanced", "green")}
+
+
+def main():
+    out = run()
+    print(f"{'mode':13s} {'node-high':>10s} {'node-medium':>12s} {'node-green':>11s}")
+    for mode, dist in out.items():
+        print(f"{mode:13s} {dist['node-high']:10.0f} {dist['node-medium']:12.0f} "
+              f"{dist['node-green']:11.0f}   (paper: "
+              f"{PAPER[mode]['node-high']:.0f}/{PAPER[mode]['node-medium']:.0f}/"
+              f"{PAPER[mode]['node-green']:.0f})")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Beyond-paper: temporal load shifting (paper §V future work).
+
+Evening-submitted deferrable workload vs run-now, diurnal (duck-curve)
+intensity traces per region.
+"""
+from __future__ import annotations
+
+from repro.core.cluster import EdgeCluster, PAPER_NODES
+from repro.core.scheduler import MODES
+from repro.core.temporal import (DeferrableTask, carbon_savings_from_deferral,
+                                 synthetic_trace)
+
+
+def run(deadlines=(0.5, 2.0, 8.0, 16.0, 24.0)):
+    traces = {
+        "node-high": synthetic_trace("coal-heavy", 620.0, solar_dip=0.1),
+        "node-medium": synthetic_trace("cn-average", 530.0, solar_dip=0.3),
+        "node-green": synthetic_trace("hydro-rich", 380.0, solar_dip=0.5),
+    }
+    rows = []
+    for dl in deadlines:
+        c = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
+        c.profile(250.0)
+        tasks = [DeferrableTask(cpu=0.05, mem_mb=16, deadline_hours=dl,
+                                duration_hours=0.25) for _ in range(20)]
+        out = carbon_savings_from_deferral(c, traces, MODES["green"], tasks,
+                                           now_hour=19.0)
+        rows.append({"deadline_h": dl, **out})
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'deadline h':>10s} {'run-now g':>10s} {'deferred g':>11s} {'savings %':>10s}")
+    for r in rows:
+        print(f"{r['deadline_h']:10.1f} {r['run_now_g']:10.4f} "
+              f"{r['deferred_g']:11.4f} {r['savings_pct']:10.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

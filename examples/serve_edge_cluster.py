@@ -1,0 +1,50 @@
+"""End-to-end driver: serve a small LM with batched requests across a
+simulated 3-region pod cluster with carbon-aware routing.
+
+This is the paper's deployment story at pod scale: real JAX prefill/decode
+(reduced qwen3 config on CPU), NSA routing per batch, roofline-derived
+energy billing per step, and a mode comparison at the end.
+
+Run:  PYTHONPATH=src python examples/serve_edge_cluster.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.registry import reduced_config
+from repro.core import costmodel, energy
+from repro.core.router import GreenRouter, PodSpec
+from repro.models import transformer
+from repro.runtime.serving import Request, ServingEngine
+
+PODS = [
+    PodSpec("pod-high", chips=256, region="coal-heavy", carbon_intensity=620.0),
+    PodSpec("pod-medium", chips=256, region="cn-average", carbon_intensity=530.0),
+    PodSpec("pod-green", chips=256, region="hydro-rich", carbon_intensity=380.0),
+]
+
+cfg = reduced_config("qwen3-1.7b")
+params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+
+results = {}
+for mode in ("performance", "green"):
+    router = GreenRouter(PODS, mode=mode)
+    flops = 2.0 * cfg.active_param_count() * 4
+    hbm = costmodel.step_hbm_bytes(cfg, 32, 4, "decode")
+    router.seed_profile({p.name: energy.roofline(flops, hbm, 0.0, 256)
+                         for p in PODS})
+    engine = ServingEngine(cfg, params, router, max_len=64, batch_size=4)
+    for i in range(12):
+        prompt = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+        engine.submit(Request(uid=i, prompt=prompt, max_new_tokens=6))
+    engine.run_all()
+    rep = engine.report()
+    results[mode] = rep
+    pods_used = {r: a["tasks"] for r, a in rep["per_region"].items() if a["tasks"]}
+    print(f"{mode:12s}: {rep['completed']} requests, "
+          f"{rep['carbon_g_total']*1e3:.4f} mgCO2, pods={pods_used}")
+
+red = 100 * (1 - results["green"]["carbon_g_total"]
+             / results["performance"]["carbon_g_total"])
+print(f"\ngreen vs performance carbon reduction: {red:.1f}% "
+      f"(routing effect only; paper's edge setup: 22.9% vs monolithic)")

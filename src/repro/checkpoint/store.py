@@ -1,0 +1,67 @@
+"""msgpack tensor checkpoints: save/restore arbitrary param pytrees.
+
+Layout: one .msgpack file with {path: {dtype, shape, data(bytes)}} plus a
+meta record (step, config name). Sharded arrays are gathered to host before
+writing (fine at the scales this container trains); restore reshards via
+jax.device_put with the target sharding tree when provided.
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): np.asarray(leaf) for path, leaf in flat}
+
+
+def save(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
+    flat = _flatten(tree)
+    payload = {
+        "__meta__": meta or {},
+        "tensors": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in flat.items()
+        },
+    }
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_suffix(".tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, p)
+
+
+def restore(path: str, target_tree: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of ``target_tree``."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    tensors = payload["tensors"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(shardings)[0]
+    leaves = []
+    for i, (pathk, leaf) in enumerate(flat):
+        key = jax.tree_util.keystr(pathk)
+        rec = tensors[key]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(path: str) -> Dict:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    return payload.get("__meta__", {})

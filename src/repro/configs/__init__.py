@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    CNNConfig,
+    ConvLayerDef,
+    INPUT_SHAPES,
+    InputShape,
+    LayerDef,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    XLSTMConfig,
+)
+
+__all__ = [
+    "CNNConfig",
+    "ConvLayerDef",
+    "INPUT_SHAPES",
+    "InputShape",
+    "LayerDef",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "XLSTMConfig",
+]

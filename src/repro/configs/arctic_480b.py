@@ -1,0 +1,29 @@
+"""Snowflake Arctic 480B [moe] — 128 experts top-2 + dense residual MLP
+[hf:Snowflake/snowflake-arctic-base].
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128e top-2.
+Arctic's dense-MoE hybrid: every layer has a small dense residual MLP in
+parallel with the 128-expert top-2 MoE.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b",
+        arch_type="moe",
+        num_layers=35,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        d_ff=4864,
+        vocab_size=32000,
+        head_dim=128,
+        moe=MoEConfig(
+            num_experts=128,
+            top_k=2,
+            expert_ff=4864,
+            dense_residual_ff=4864,
+        ),
+        source="hf:Snowflake/snowflake-arctic-base",
+    )

@@ -1,0 +1,24 @@
+"""Command-R 35B [dense] — GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01].
+
+40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000.
+"""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-35b",
+        arch_type="dense",
+        num_layers=40,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=22528,
+        vocab_size=256000,
+        head_dim=128,
+        qkv_bias=False,
+        norm_type="layernorm",
+        tie_embeddings=True,
+        rope_theta=8e6,
+        source="hf:CohereForAI/c4ai-command-r-v01",
+    )

@@ -1,0 +1,34 @@
+"""Gemma3-27B [dense] — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt family].
+
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144.
+Pattern: 10 x (5 local(window=1024) + 1 global) + 2 local = 62 layers.
+Gemma3 uses qk-norm and logit softcapping.
+"""
+from repro.configs.base import LayerDef, ModelConfig
+
+_LOCAL = LayerDef("attn", window=1024)
+_GLOBAL = LayerDef("attn", window=None)
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b",
+        arch_type="dense",
+        num_layers=62,
+        d_model=5376,
+        num_heads=32,
+        num_kv_heads=16,
+        d_ff=21504,
+        vocab_size=262144,
+        head_dim=128,
+        pattern=tuple([_LOCAL] * 5 + [_GLOBAL]),
+        repeats=10,
+        suffix=(_LOCAL, _LOCAL),
+        qk_norm=True,
+        attn_logit_softcap=50.0,
+        act="gelu",
+        rope_theta=1e6,
+        tie_embeddings=True,
+        source="hf:google/gemma-3-1b-pt",
+    )

@@ -1,0 +1,32 @@
+"""Qwen2-MoE-A2.7B [moe] — 4 shared + 60 routed experts top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=151936, MoE 60e top-4.
+The 4 shared experts are always-on (fused into one MLP of width 4*1408).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b",
+        arch_type="moe",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=1408,
+        vocab_size=151936,
+        moe=MoEConfig(
+            num_experts=60,
+            top_k=4,
+            expert_ff=1408,
+            num_shared_experts=4,
+            # 60 does not divide the 16-way model axis; pad the expert
+            # weight layout to 64 for expert parallelism (router-masked).
+            padded_experts=64,
+        ),
+        qkv_bias=True,
+        rope_theta=1e6,
+        source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    )

@@ -1,0 +1,29 @@
+"""Qwen2-VL-2B [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936. The ViT vision
+encoder + projector is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (batch, 256, d_model) which the model prepends
+to the token sequence. M-RoPE uses (temporal, height, width) sections of
+(16, 24, 24) over head_dim/2 = 64.
+"""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b",
+        arch_type="vlm",
+        num_layers=28,
+        d_model=1536,
+        num_heads=12,
+        num_kv_heads=2,
+        d_ff=8960,
+        vocab_size=151936,
+        head_dim=128,
+        qkv_bias=True,
+        mrope_sections=(16, 24, 24),
+        vision_tokens=256,
+        rope_theta=1e6,
+        tie_embeddings=True,
+        source="arXiv:2409.12191",
+    )

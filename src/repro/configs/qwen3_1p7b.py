@@ -1,0 +1,24 @@
+"""Qwen3-1.7B [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B family].
+
+28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936.
+"""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-1.7b",
+        arch_type="dense",
+        num_layers=28,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        d_ff=6144,
+        vocab_size=151936,
+        head_dim=128,
+        qk_norm=True,
+        qkv_bias=False,
+        rope_theta=1e6,
+        tie_embeddings=True,
+        source="hf:Qwen/Qwen3-8B",
+    )

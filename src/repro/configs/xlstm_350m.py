@@ -1,0 +1,28 @@
+"""xLSTM-350M [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+24L d_model=1024 4H (GQA kv=4) d_ff=0 vocab=50304. d_ff=0: xLSTM blocks
+carry their own internal up/down projections (mLSTM 2x, sLSTM 4/3x ffn),
+there is no separate transformer FFN. Pattern follows the paper's
+xLSTM[7:1] ratio: 3 x (7 mLSTM + 1 sLSTM) = 24 layers.
+"""
+from repro.configs.base import LayerDef, ModelConfig, XLSTMConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m",
+        arch_type="ssm",
+        num_layers=24,
+        d_model=1024,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        pattern=tuple([LayerDef("mlstm")] * 7 + [LayerDef("slstm")]),
+        repeats=3,
+        xlstm=XLSTMConfig(num_heads=4),
+        pos_emb="none",           # xLSTM needs no positional embedding
+        mlp_gated=False,
+        tie_embeddings=True,
+        source="arXiv:2405.04517",
+    )

@@ -1,0 +1,25 @@
+"""Zamba2-2.7B [hybrid] — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242].
+
+54L d_model=2560 32H (GQA kv=32) d_ff=10240 vocab=32000, ssm_state=64.
+Pattern: 9 x (5 Mamba2 + 1 attention) = 54 layers — approximates Zamba2's
+periodic shared-attention placement with the exact layer count.
+"""
+from repro.configs.base import LayerDef, ModelConfig, SSMConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b",
+        arch_type="hybrid",
+        num_layers=54,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=10240,
+        vocab_size=32000,
+        pattern=tuple([LayerDef("mamba2")] * 5 + [LayerDef("attn")]),
+        repeats=9,
+        ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4),
+        source="arXiv:2411.15242",
+    )

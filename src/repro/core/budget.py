@@ -1,0 +1,107 @@
+"""Multi-tenant carbon budgets — paper §V future work
+("multi-tenant optimization with carbon budgets").
+
+Each tenant holds a periodic carbon allowance; the BudgetedRouter admits a
+request only if the tenant's remaining budget covers the cheapest feasible
+placement's expected emissions, charges actual emissions on commit, and
+escalates a tenant's effective mode (performance -> balanced -> green) as
+its budget depletes, so heavy users are pushed toward low-carbon placements
+before being throttled.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.energy import RooflineTerms
+from repro.core.router import GreenRouter, PodSpec
+from repro.core.scheduler import MODES, Task
+
+
+@dataclass
+class TenantBudget:
+    tenant: str
+    allowance_g: float                   # per accounting period
+    spent_g: float = 0.0
+    denied: int = 0
+    admitted: int = 0
+
+    @property
+    def remaining_g(self) -> float:
+        return max(self.allowance_g - self.spent_g, 0.0)
+
+    @property
+    def utilisation(self) -> float:
+        return self.spent_g / self.allowance_g if self.allowance_g else 1.0
+
+
+# Budget-pressure escalation thresholds (fraction of allowance spent).
+_ESCALATION = ((0.5, "performance"), (0.8, "balanced"), (1.01, "green"))
+
+
+@dataclass
+class AdmissionResult:
+    admitted: bool
+    pod: Optional[str] = None
+    mode: str = "green"
+    expected_carbon_g: float = 0.0
+    reason: str = ""
+
+
+class BudgetedRouter:
+    """GreenRouter + per-tenant carbon accounting and admission control."""
+
+    def __init__(self, router: GreenRouter):
+        self.router = router
+        self.tenants: Dict[str, TenantBudget] = {}
+
+    def register_tenant(self, tenant: str, allowance_g: float):
+        self.tenants[tenant] = TenantBudget(tenant, allowance_g)
+
+    def _mode_for(self, b: TenantBudget) -> str:
+        for frac, mode in _ESCALATION:
+            if b.utilisation < frac:
+                return mode
+        return "green"
+
+    def _expected_carbon(self, pod_name: str, terms: RooflineTerms) -> float:
+        pod = self.router.pods[pod_name]
+        from repro.core import energy
+
+        e = energy.step_energy_kwh(terms, pod.chips, pod.chip_power_w)
+        return energy.carbon_g(e, pod.carbon_intensity)
+
+    def admit(self, tenant: str, terms: RooflineTerms,
+              task: Optional[Task] = None) -> AdmissionResult:
+        b = self.tenants[tenant]
+        mode = self._mode_for(b)
+        prev = self.router.weights
+        self.router.weights = MODES[mode]
+        try:
+            pod = self.router.route(task)
+        finally:
+            self.router.weights = prev
+        expected = self._expected_carbon(pod, terms)
+        if expected > b.remaining_g:
+            # try the absolute greenest feasible pod before denying
+            greenest = min(self.router.pods.values(),
+                           key=lambda p: p.carbon_intensity)
+            expected_g = self._expected_carbon(greenest.name, terms)
+            if expected_g > b.remaining_g:
+                b.denied += 1
+                return AdmissionResult(False, None, mode, expected_g,
+                                       "carbon budget exhausted")
+            pod, expected = greenest.name, expected_g
+        b.admitted += 1
+        return AdmissionResult(True, pod, mode, expected)
+
+    def commit(self, tenant: str, pod: str, terms: RooflineTerms) -> float:
+        carbon = self.router.commit(pod, terms)
+        self.tenants[tenant].spent_g += carbon
+        return carbon
+
+    def report(self) -> Dict[str, Dict[str, float]]:
+        return {t: {"allowance_g": b.allowance_g, "spent_g": b.spent_g,
+                    "remaining_g": b.remaining_g, "admitted": b.admitted,
+                    "denied": b.denied, "utilisation": b.utilisation}
+                for t, b in self.tenants.items()}

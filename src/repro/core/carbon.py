@@ -1,0 +1,98 @@
+"""Carbon Monitor (paper §III.B).
+
+Tracks energy (Eq. 1: E = ∫ P dt, discretised) and emissions
+(Eq. 2: C = E * I * PUE) per node/region, with two power sources:
+
+- ``record_power_sample``: wall-clock x sampled power (the CodeCarbon path;
+  on this host we sample a process-CPU proxy),
+- ``record_step``: workload-derived — roofline step time x device power
+  from the compiled artifact (core/energy.py), which lets the scheduler
+  score *before* executing (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core import energy as energy_mod
+from repro.core.energy import RooflineTerms
+
+RAM_W_PER_GB = 0.375  # paper §III.B.1 DDR4 approximation
+
+
+@dataclass
+class EnergySample:
+    t_s: float
+    power_w: float
+
+
+@dataclass
+class RegionAccount:
+    intensity_g_per_kwh: float
+    pue: float = 1.0
+    energy_kwh: float = 0.0
+    carbon_g: float = 0.0
+    tasks: int = 0
+
+
+class CarbonMonitor:
+    def __init__(self):
+        self.regions: Dict[str, RegionAccount] = {}
+        self._samples: List[EnergySample] = []
+
+    def register_region(self, name: str, intensity: float, pue: float = 1.0):
+        self.regions[name] = RegionAccount(intensity, pue)
+
+    # -- Eq. 1: discretised power integration ------------------------------
+    def record_power_sample(self, region: str, dt_s: float, p_gpu_w: float = 0.0,
+                            p_cpu_w: float = 0.0, ram_gb: float = 0.0) -> float:
+        p = p_gpu_w + p_cpu_w + ram_gb * RAM_W_PER_GB
+        e_kwh = p * dt_s / 3.6e6
+        self._samples.append(EnergySample(dt_s, p))
+        return self._bill(region, e_kwh)
+
+    # -- workload-derived (roofline) ---------------------------------------
+    def record_step(self, region: str, terms: RooflineTerms, chips: int,
+                    chip_power_w: float = energy_mod.CHIP_POWER_W) -> float:
+        e_kwh = energy_mod.step_energy_kwh(terms, chips, chip_power_w)
+        return self._bill(region, e_kwh)
+
+    def _bill(self, region: str, e_kwh: float) -> float:
+        acc = self.regions[region]
+        c = energy_mod.carbon_g(e_kwh, acc.intensity_g_per_kwh, acc.pue)
+        acc.energy_kwh += e_kwh
+        acc.carbon_g += c
+        acc.tasks += 1
+        return c
+
+    # -- reporting ----------------------------------------------------------
+    def total_carbon_g(self) -> float:
+        return sum(a.carbon_g for a in self.regions.values())
+
+    def total_energy_kwh(self) -> float:
+        return sum(a.energy_kwh for a in self.regions.values())
+
+    def report(self) -> Dict[str, Dict[str, float]]:
+        return {r: {"energy_kwh": a.energy_kwh, "carbon_g": a.carbon_g,
+                    "tasks": a.tasks, "intensity": a.intensity_g_per_kwh}
+                for r, a in self.regions.items()}
+
+
+class WallClockEnergyTracker:
+    """Minimal CodeCarbon-style context: samples process time x power."""
+
+    def __init__(self, monitor: CarbonMonitor, region: str, power_w: float):
+        self.monitor, self.region, self.power_w = monitor, region, power_w
+        self.elapsed_s = 0.0
+        self.carbon_g = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed_s = time.perf_counter() - self._t0
+        self.carbon_g = self.monitor.record_power_sample(
+            self.region, self.elapsed_s, p_cpu_w=self.power_w)
+        return False

@@ -1,0 +1,67 @@
+"""Energy + roofline model (TPU v5e constants) — the workload-derived
+replacement for CodeCarbon's host measurement (DESIGN.md §2).
+
+Three roofline terms per compiled step:
+    compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes   / (chips * HBM_BW)
+    collective = coll_bytes  / (chips * ICI_BW)
+
+The step-time model is max(terms); energy = chips * power * time; carbon =
+energy * intensity * PUE (paper Eq. 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+# TPU v5e per-chip constants (assignment-specified).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link
+CHIP_POWER_W = 200.0              # nominal per-chip board power
+HOST_OVERHEAD_W = 30.0            # per-chip share of host power
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s,
+                "step_time_s": self.step_time_s, "bottleneck": self.bottleneck}
+
+
+def roofline(flops: float, bytes_hbm: float, bytes_collective: float,
+             chips: int) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops / (chips * PEAK_FLOPS_BF16),
+        memory_s=bytes_hbm / (chips * HBM_BW),
+        collective_s=bytes_collective / (chips * ICI_BW),
+    )
+
+
+def step_energy_kwh(terms: RooflineTerms, chips: int,
+                    chip_power_w: float = CHIP_POWER_W,
+                    host_overhead_w: float = HOST_OVERHEAD_W) -> float:
+    """Eq. 1 adapted: E = integral P dt = P_total * t_step."""
+    p_total = chips * (chip_power_w + host_overhead_w)
+    return p_total * terms.step_time_s / 3.6e6
+
+
+def carbon_g(energy_kwh: float, intensity_g_per_kwh: float,
+             pue: float = 1.0) -> float:
+    """Paper Eq. 2: C = E * I * PUE."""
+    return energy_kwh * intensity_g_per_kwh * pue

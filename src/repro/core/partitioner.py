@@ -1,0 +1,142 @@
+"""Green Partitioning Strategy (paper §III.E).
+
+Splits a model's layer list into contiguous segments for heterogeneous
+nodes, balancing per-segment cost against node capacity while minimising
+boundary (communication) bytes — and, in green mode, weighting capacity by
+carbon efficiency so low-carbon nodes receive proportionally more work.
+
+Works over two cost domains:
+- CNNs: paper Eq. 5 costs (core/costmodel.cnn_costs) + activation bytes
+  (models/cnn.activation_bytes);
+- transformers: per-block FLOPs (core/costmodel.block_flops) + boundary
+  bytes — this is the pipeline-stage assignment used at pod scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import CNNConfig, ModelConfig
+from repro.core import costmodel
+
+
+@dataclass(frozen=True)
+class Partition:
+    boundaries: Tuple[int, ...]       # k+1 cut points: [0, b1, ..., L]
+    segment_costs: Tuple[float, ...]
+    comm_bytes: Tuple[float, ...]     # bytes crossing each internal cut
+    node_order: Tuple[str, ...]       # node per segment
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.boundaries) - 1
+
+    def segments(self) -> List[Tuple[int, int]]:
+        return [(self.boundaries[i], self.boundaries[i + 1])
+                for i in range(self.num_segments)]
+
+
+def _imbalance(seg_costs: np.ndarray, weights: np.ndarray) -> float:
+    """Max relative overload of any segment vs its node's weighted share."""
+    share = weights / weights.sum()
+    total = seg_costs.sum()
+    with np.errstate(divide="ignore"):
+        return float(np.max(seg_costs / (share * total + 1e-12)))
+
+
+def partition_costs(costs: Sequence[float], node_weights: Sequence[float],
+                    boundary_bytes: Optional[Sequence[float]] = None,
+                    comm_weight: float = 0.0) -> Partition:
+    """DP partition of `costs` into len(node_weights) contiguous segments.
+
+    Minimises  max_i seg_cost_i / share_i  +  comm_weight * sum(cut bytes).
+    boundary_bytes[i] = bytes crossing a cut before layer i (len == len(costs)+1).
+    """
+    L, k = len(costs), len(node_weights)
+    if k <= 1 or L < k:
+        return Partition((0, L), (float(sum(costs)),), (), ("0",) * min(1, k))
+    costs = np.asarray(costs, dtype=np.float64)
+    prefix = np.concatenate([[0.0], np.cumsum(costs)])
+    w = np.asarray(node_weights, dtype=np.float64)
+    share = w / w.sum()
+    total = prefix[-1]
+    bb = np.asarray(boundary_bytes if boundary_bytes is not None
+                    else np.zeros(L + 1), dtype=np.float64)
+
+    # DP over (segment s, end index j): value = (bottleneck, comm) lexicographic
+    # combined as bottleneck + comm_weight*comm.
+    INF = np.inf
+    dp = np.full((k + 1, L + 1), INF)
+    par = np.zeros((k + 1, L + 1), dtype=np.int64)
+    dp[0, 0] = 0.0
+    for s in range(1, k + 1):
+        cap = share[s - 1] * total + 1e-12
+        for j in range(s, L + 1):
+            # segment is (i, j], previous end i
+            lo = s - 1
+            best, arg = INF, lo
+            for i in range(lo, j):
+                if dp[s - 1, i] == INF:
+                    continue
+                seg = prefix[j] - prefix[i]
+                load = seg / cap
+                comm = comm_weight * bb[i] if i > 0 else 0.0
+                val = max(dp[s - 1, i], load + comm)
+                if val < best:
+                    best, arg = val, i
+            dp[s, j], par[s, j] = best, arg
+    # Recover boundaries.
+    bounds = [L]
+    j = L
+    for s in range(k, 0, -1):
+        j = int(par[s, j])
+        bounds.append(j)
+    bounds = tuple(reversed(bounds))
+    seg_costs = tuple(float(prefix[b] - prefix[a])
+                      for a, b in zip(bounds[:-1], bounds[1:]))
+    comm = tuple(float(bb[b]) for b in bounds[1:-1])
+    return Partition(bounds, seg_costs, comm, tuple(str(i) for i in range(k)))
+
+
+# ---------------------------------------------------------------------------
+# Node-weighting policies
+# ---------------------------------------------------------------------------
+
+
+def capacity_weights(cpus: Sequence[float]) -> np.ndarray:
+    return np.asarray(cpus, dtype=np.float64)
+
+
+def green_weights(cpus: Sequence[float], intensities: Sequence[float],
+                  carbon_weight: float = 0.5) -> np.ndarray:
+    """Blend capacity with inverse carbon intensity (green partitioning):
+    w_i = cpu_i^(1-a) * (1/I_i)^a, normalised."""
+    c = np.asarray(cpus, dtype=np.float64)
+    inv_i = 1.0 / np.asarray(intensities, dtype=np.float64)
+    w = np.power(c, 1.0 - carbon_weight) * np.power(inv_i / inv_i.max(), carbon_weight)
+    return w / w.sum()
+
+
+# ---------------------------------------------------------------------------
+# Front-ends
+# ---------------------------------------------------------------------------
+
+
+def partition_cnn(cfg: CNNConfig, node_weights: Sequence[float],
+                  batch: int = 1, comm_weight: float = 0.0) -> Partition:
+    from repro.models import cnn as cnn_mod
+
+    costs = costmodel.cnn_costs(cfg)
+    bb = [cnn_mod.activation_bytes(cfg, i, batch) for i in range(len(costs) + 1)]
+    return partition_costs(costs, node_weights, bb, comm_weight)
+
+
+def partition_transformer(cfg: ModelConfig, node_weights: Sequence[float],
+                          seq: int, batch: int,
+                          comm_weight: float = 0.0) -> Partition:
+    costs = [costmodel.block_flops(cfg, ld, seq, batch)
+             for ld in cfg.layer_defs]
+    bb = [costmodel.boundary_bytes(cfg, seq, batch)] * (len(costs) + 1)
+    return partition_costs(costs, node_weights, bb, comm_weight)

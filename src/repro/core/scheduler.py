@@ -1,0 +1,146 @@
+"""Carbon-Aware Scheduling Algorithm (paper §III.C–D, Algorithm 1).
+
+S_total = w_R*S_R + w_L*S_L + w_P*S_P + w_B*S_B + w_C*S_C         (Eq. 3)
+S_C     = 1 / (1 + I_carbon * E_est),  E_est = P*T_avg/3.6e6      (Eq. 4)
+
+Three operational modes (Table I) plus a continuous weight-sweep
+interpolation used by Fig. 3. A vectorised jnp scorer mirrors the Python
+loop for fleet-scale scheduling; its Pallas TPU kernel lives in
+kernels/node_score.py with this module as oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import EdgeCluster, NodeState
+
+
+@dataclass(frozen=True)
+class Weights:
+    w_r: float
+    w_l: float
+    w_p: float
+    w_b: float
+    w_c: float
+
+    def as_array(self) -> np.ndarray:
+        return np.array([self.w_r, self.w_l, self.w_p, self.w_b, self.w_c])
+
+
+# Paper Table I.
+MODES: Dict[str, Weights] = {
+    "performance": Weights(0.25, 0.25, 0.30, 0.15, 0.05),
+    "green": Weights(0.15, 0.15, 0.10, 0.10, 0.50),
+    "balanced": Weights(0.20, 0.20, 0.15, 0.15, 0.30),
+}
+
+
+def sweep_weights(w_c: float) -> Weights:
+    """Fig. 3 interpolation: carbon weight w_c, the rest scaled from the
+    Performance-mode ratios (which sum to 0.95)."""
+    base = MODES["performance"]
+    s = (1.0 - w_c) / 0.95
+    return Weights(base.w_r * s, base.w_l * s, base.w_p * s, base.w_b * s, w_c)
+
+
+@dataclass(frozen=True)
+class Task:
+    cpu: float = 0.1
+    mem_mb: float = 64.0
+    base_latency_ms: float = 250.0
+
+
+# ---------------------------------------------------------------------------
+# Score components (Algorithm 1 lines 7-11)
+# ---------------------------------------------------------------------------
+
+
+def resource_score(st: NodeState, task: Task) -> float:
+    free_cpu = st.spec.cpu * (1.0 - st.load)
+    free_mem = st.spec.mem_mb - st.mem_used_mb
+    s_cpu = min(1.0, free_cpu / task.cpu) if task.cpu > 0 else 1.0
+    s_mem = min(1.0, free_mem / task.mem_mb) if task.mem_mb > 0 else 1.0
+    return 0.5 * s_cpu + 0.5 * s_mem
+
+
+def scores(st: NodeState, task: Task, host_power_w: float) -> np.ndarray:
+    s_r = resource_score(st, task)
+    s_l = 1.0 - st.load
+    s_p = 1.0 / (1.0 + st.avg_time_ms / 1000.0)
+    s_b = 1.0 / (1.0 + st.running * 2.0)
+    e_est = st.power_w(host_power_w) * st.avg_time_ms / 3.6e6  # Eq. 4 units
+    s_c = 1.0 / (1.0 + st.spec.carbon_intensity * e_est)
+    return np.array([s_r, s_l, s_p, s_b, s_c])
+
+
+def has_sufficient_resources(st: NodeState, task: Task) -> bool:
+    return (st.spec.cpu * (1.0 - st.load) >= task.cpu
+            and st.spec.mem_mb - st.mem_used_mb >= task.mem_mb)
+
+
+def select_node(cluster: EdgeCluster, task: Task, weights: Weights,
+                latency_threshold_ms: float = 5000.0) -> Optional[str]:
+    """Algorithm 1: Carbon-Aware Node Selection."""
+    best_score, best = 0.0, None
+    for name, st in cluster.nodes.items():
+        if st.load > 0.8 or st.avg_time_ms > latency_threshold_ms:
+            continue
+        if not has_sufficient_resources(st, task):
+            continue
+        s = float(weights.as_array() @ scores(st, task, cluster.host_power_w))
+        if s > best_score:
+            best_score, best = s, name
+    return best
+
+
+def score_table(cluster: EdgeCluster, task: Task) -> Dict[str, np.ndarray]:
+    return {name: scores(st, task, cluster.host_power_w)
+            for name, st in cluster.nodes.items()}
+
+
+# ---------------------------------------------------------------------------
+# Vectorised scorer (fleet scale) — oracle for kernels/node_score.py
+# ---------------------------------------------------------------------------
+
+
+def vector_scores(features: np.ndarray, weights: np.ndarray) -> np.ndarray:
+    """features: (N, 6) = [cpu_free_frac, mem_free_frac, load, avg_time_s,
+    running, intensity_x_e_est]; returns (N,) total scores.
+
+    Same math as `scores` with task-sufficiency folded into features.
+    """
+    s_r = 0.5 * np.minimum(1.0, features[:, 0]) + 0.5 * np.minimum(1.0, features[:, 1])
+    s_l = 1.0 - features[:, 2]
+    s_p = 1.0 / (1.0 + features[:, 3])
+    s_b = 1.0 / (1.0 + features[:, 4] * 2.0)
+    s_c = 1.0 / (1.0 + features[:, 5])
+    comp = np.stack([s_r, s_l, s_p, s_b, s_c], axis=-1)
+    return comp @ weights
+
+
+def vector_select(features: np.ndarray, weights: np.ndarray,
+                  valid: np.ndarray) -> int:
+    total = np.where(valid, vector_scores(features, weights), -np.inf)
+    return int(np.argmax(total))
+
+
+# ---------------------------------------------------------------------------
+# Driver: run a workload through the scheduler (benchmarks use this)
+# ---------------------------------------------------------------------------
+
+
+def run_workload(cluster: EdgeCluster, task: Task, weights: Weights,
+                 iterations: int = 50) -> Dict:
+    """Serial 50-inference workload (paper §IV.A.4)."""
+    for _ in range(iterations):
+        node = select_node(cluster, task, weights)
+        if node is None:
+            raise RuntimeError("no feasible node")
+        st = cluster.nodes[node]
+        st.running += 1
+        cluster.execute(node, task.base_latency_ms, distributed=True)
+        st.running -= 1
+    return {"totals": cluster.totals(), "distribution": cluster.distribution()}

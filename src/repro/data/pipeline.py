@@ -1,0 +1,76 @@
+"""Deterministic data pipeline: synthetic LM batches + byte-level corpus.
+
+Seeded, host-side numpy generation (no device allocation until the step
+consumes the batch); supports the extras every architecture needs
+(encoder frames, vision patches, M-RoPE positions).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    corpus: Optional[str] = None     # path to a text file (byte-level LM)
+
+
+def _extras(cfg: ModelConfig, rng: np.random.Generator, B: int, S: int) -> Dict:
+    out = {}
+    if cfg.encoder_layers:
+        out["encoder_embeds"] = rng.standard_normal(
+            (B, cfg.encoder_seq, cfg.d_model), dtype=np.float32) * 0.02
+    if cfg.vision_tokens:
+        out["vision_embeds"] = rng.standard_normal(
+            (B, cfg.vision_tokens, cfg.d_model), dtype=np.float32) * 0.02
+    if cfg.mrope_sections:
+        pos = np.broadcast_to(np.arange(S)[None, None, :], (B, 3, S)).copy()
+        out["mrope_positions"] = pos.astype(np.int32)
+    return out
+
+
+def synthetic_batches(cfg: ModelConfig, dcfg: DataConfig) -> Iterator[Dict]:
+    """Markov-ish synthetic tokens (learnable structure, not uniform noise)."""
+    rng = np.random.default_rng(dcfg.seed)
+    B = dcfg.global_batch
+    S = dcfg.seq_len - cfg.vision_tokens
+    V = cfg.vocab_size
+    # fixed random bigram table over a small "hot" vocab
+    hot = min(V, 512)
+    table = rng.integers(0, hot, size=(hot, 8))
+    while True:
+        toks = np.zeros((B, S + 1), np.int32)
+        toks[:, 0] = rng.integers(0, hot, size=B)
+        choice = rng.integers(0, 8, size=(B, S))
+        for t in range(S):
+            toks[:, t + 1] = table[toks[:, t] % hot, choice[:, t]]
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        batch.update(_extras(cfg, rng, B, dcfg.seq_len))
+        yield batch
+
+
+def corpus_batches(cfg: ModelConfig, dcfg: DataConfig) -> Iterator[Dict]:
+    """Byte-level LM over a text file (vocab must be >= 256)."""
+    data = np.frombuffer(open(dcfg.corpus, "rb").read(), dtype=np.uint8)
+    rng = np.random.default_rng(dcfg.seed)
+    B = dcfg.global_batch
+    S = dcfg.seq_len - cfg.vision_tokens
+    while True:
+        starts = rng.integers(0, len(data) - S - 1, size=B)
+        toks = np.stack([data[s: s + S + 1] for s in starts]).astype(np.int32)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        batch.update(_extras(cfg, rng, B, dcfg.seq_len))
+        yield batch
+
+
+def make_batches(cfg: ModelConfig, dcfg: DataConfig) -> Iterator[Dict]:
+    if dcfg.corpus:
+        return corpus_batches(cfg, dcfg)
+    return synthetic_batches(cfg, dcfg)

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they
+compile to Mosaic. ``use_pallas()`` gates whether model code routes through
+kernels or the pure-jnp reference path (the default on CPU, where interpret
+mode is slow).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba2_chunk as _mc
+from repro.kernels import node_score as _ns
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def use_pallas() -> bool:
+    if os.environ.get("REPRO_USE_PALLAS"):
+        return os.environ["REPRO_USE_PALLAS"] not in ("0", "false")
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                    softcap: float = 0.0):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, interpret=_interpret())
+
+
+def decode_attention(q, k, v, pos, *, window: Optional[int] = None,
+                     softcap: float = 0.0):
+    return _dec.decode_attention(q, k, v, pos, window=window,
+                                 softcap=softcap, interpret=_interpret())
+
+
+def mamba2_chunk(xdt, Bh, Ch, cum, state):
+    return _mc.mamba2_chunk(xdt, Bh, Ch, cum, state, interpret=_interpret())
+
+
+def node_scores(features, weights):
+    return _ns.node_scores(features, weights, interpret=_interpret())
+
+
+def select_best_node(features, weights):
+    return _ns.select_best(features, weights, interpret=_interpret())
+
+
+# Re-export oracles for tests/benchmarks.
+flash_attention_ref = ref.flash_attention_ref
+decode_attention_ref = ref.decode_attention_ref
+mamba2_chunk_ref = ref.mamba2_chunk_ref
+node_scores_ref = ref.node_scores_ref

@@ -1,0 +1,131 @@
+"""HLO analysis: collective-byte extraction from partitioned HLO text.
+
+``cost_analysis()`` has no collective accounting, so §Roofline's collective
+term comes from summing **operand** bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.
+
+The partitioned HLO prints operands without type annotations
+(``all-reduce(%x)``), so operand bytes are derived from the *result* shape
+and the replica-group size:
+
+    all-reduce         operand = result
+    all-to-all         operand = result
+    collective-permute operand = result
+    all-gather         operand = result / group_size
+    reduce-scatter     operand = result * group_size
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind operand bytes (per device) summed over the module."""
+    out = {k: 0.0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        result_bytes = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(m.group(1)))
+        g = _group_size(line)
+        if kind == "all-gather":
+            operand = result_bytes / max(g, 1)
+        elif kind == "reduce-scatter":
+            operand = result_bytes * g
+        else:
+            operand = result_bytes
+        out[kind] += float(operand)
+    out["total"] = float(sum(out[k] for k in COLLECTIVE_OPS))
+    return out
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m:
+            out[m.group(2)] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dot-level FLOP attribution (perf-pass diagnostics)
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT )?(%[\w.\-]+) = ([a-z0-9]+)\[([0-9,]*)\]")
+_DOT_RE = re.compile(r" dot\((%[\w.\-]+), (%[\w.\-]+)\)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def dot_flops(hlo_text: str):
+    """Returns list of (flops, op_name, result_shape) per dot, using the
+    lhs operand's contracting dims. Per-device numbers."""
+    shapes = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            dims = tuple(int(x) for x in m.group(3).split(",") if x)
+            shapes[m.group(1)] = dims
+    out = []
+    for line in hlo_text.splitlines():
+        md = _DOT_RE.search(line)
+        if not md:
+            continue
+        mres = _DEF_RE.match(line)
+        mc = _CDIMS_RE.search(line)
+        if not (mres and mc):
+            continue
+        lhs = shapes.get(md.group(1))
+        res = tuple(int(x) for x in mres.group(3).split(",") if x)
+        if lhs is None:
+            continue
+        cdims = [int(x) for x in mc.group(1).split(",") if x]
+        k = 1
+        for c in cdims:
+            k *= lhs[c]
+        n = 1
+        for d in res:
+            n *= d
+        name = _META_RE.search(line)
+        out.append((2.0 * n * k, name.group(1) if name else "?", res))
+    return out

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (not module-level constant) so importing never touches jax
+device state. Single pod: (16, 16) = 256 chips ("data", "model").
+Multi-pod: (2, 16, 16) = 512 chips ("pod", "data", "model").
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, model: int = 2, data: int = 2, pod: int = 0):
+    """Small mesh for CPU tests (requires host-device-count env set)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct stand-ins for every model input, per input shape.
+
+``input_specs`` never allocates device memory — it is the dry-run contract:
+weak-type-correct, shardable abstract values.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import transformer
+from repro.optim import adamw
+
+# Archs whose long_500k run uses the sliding-window variant (DESIGN.md
+# §Arch-applicability): every full-attention layer is overridden to a 4096
+# window so 524288-token decode is a deployable configuration.
+SWA_OVERRIDE_WINDOW = 4096
+NATIVE_LONG = {"xlstm-350m", "zamba2-2.7b", "gemma3-27b"}
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> Tuple[ModelConfig, bool]:
+    """Returns (possibly-variant config, is_swa_variant)."""
+    if shape.name == "long_500k" and cfg.name not in NATIVE_LONG:
+        has_full_attn = any(ld.kind == "attn" and ld.window is None
+                            for ld in cfg.layer_defs)
+        if has_full_attn:
+            return cfg.with_attention_window(SWA_OVERRIDE_WINDOW), True
+    return cfg, False
+
+
+def token_len(cfg: ModelConfig, seq: int) -> int:
+    return seq - cfg.vision_tokens
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    st = token_len(cfg, S)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, st), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, st), jnp.int32),
+    }
+    _add_extras(cfg, batch, B, S)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, token_len(cfg, S)), jnp.int32)}
+    _add_extras(cfg, batch, B, S)
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape):
+    """(cache, token, pos) abstract values."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = transformer.abstract_cache(cfg, B, S)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, token, pos
+
+
+def _add_extras(cfg: ModelConfig, batch: Dict, B: int, S: int):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.encoder_layers:
+        batch["encoder_embeds"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = jax.ShapeDtypeStruct((B, cfg.vision_tokens, cfg.d_model), dt)
+    if cfg.mrope_sections:
+        batch["mrope_positions"] = jax.ShapeDtypeStruct((B, 3, S), jnp.int32)
+
+
+def abstract_train_state(cfg: ModelConfig):
+    params = transformer.abstract_params(cfg)
+    opt = adamw.abstract_init(params)
+    return params, opt

@@ -1,0 +1,81 @@
+"""Training launcher: --arch <id> [--steps N] with reduced-config CPU mode.
+
+On the production mesh this is the function the dry-run lowers; here it
+actually runs (reduced or full config, per flags) with the data pipeline,
+AdamW, checkpointing and carbon accounting.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.configs.registry import get_config, list_archs, reduced_config
+from repro.core import costmodel, energy
+from repro.core.carbon import CarbonMonitor
+from repro.data.pipeline import DataConfig, make_batches
+from repro.models import transformer
+from repro.optim import adamw
+from repro.runtime import steps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full architecture (needs accelerators)")
+    ap.add_argument("--corpus", default=None)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--carbon-intensity", type=float, default=380.0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full_config else reduced_config(args.arch)
+    print(f"arch={cfg.name} layers={cfg.num_layers} d_model={cfg.d_model} "
+          f"params~{cfg.param_count()/1e6:.1f}M")
+
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                warmup_steps=max(1, args.steps // 10))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = adamw.init(params)
+    step_fn = jax.jit(steps.train_step(cfg, opt_cfg))
+
+    monitor = CarbonMonitor()
+    monitor.register_region("train", args.carbon_intensity)
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      corpus=args.corpus)
+    batches = make_batches(cfg, dcfg)
+
+    t_start = time.perf_counter()
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        # Bill the step: wall-clock x a CPU power estimate on this host.
+        monitor.record_power_sample("train", dt, p_cpu_w=65.0, ram_gb=4.0)
+        if step % args.log_every == 0 or step == 1:
+            print(f"step {step:4d}  loss {loss:.4f}  {dt*1e3:7.1f} ms  "
+                  f"lr {float(metrics['lr']):.2e}  gnorm {float(metrics['grad_norm']):.3f}")
+    total = time.perf_counter() - t_start
+    print(f"done {args.steps} steps in {total:.1f}s; "
+          f"carbon {monitor.total_carbon_g():.4f} gCO2 "
+          f"({monitor.total_energy_kwh()*1e3:.3f} Wh) at "
+          f"{args.carbon_intensity:.0f} gCO2/kWh")
+    if args.checkpoint:
+        store.save(args.checkpoint, params,
+                   {"arch": cfg.name, "steps": args.steps})
+        print(f"checkpoint -> {args.checkpoint}")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""JAX CNN zoo for the paper's own test models (MobileNetV2/V4,
+EfficientNet-B0) — used by the faithful-reproduction benchmarks and as the
+workload the green partitioner splits (Eq. 5 cost model).
+
+The model executes the same ConvLayerDef list the partitioner costs, so a
+partition boundary at layer i is executable: ``forward_range(params, x, i,
+j)`` runs layers [i, j) — that is exactly how segments are deployed onto
+simulated edge nodes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CNNConfig, ConvLayerDef
+
+
+def param_count(cfg: CNNConfig) -> int:
+    n = 0
+    for l in cfg.layers:
+        if l.kind == "conv":
+            n += l.k * l.k * l.cin * l.cout + l.cout
+        elif l.kind == "dwconv":
+            n += l.k * l.k * l.cin + l.cin
+        elif l.kind == "linear":
+            n += l.cin * l.cout + l.cout
+        elif l.kind == "se":
+            n += 2 * l.cin * l.cout + l.cin + l.cout
+    return n
+
+
+def init_params(cfg: CNNConfig, key: jax.Array) -> List[Dict]:
+    params = []
+    for i, l in enumerate(cfg.layers):
+        k = jax.random.fold_in(key, i)
+        if l.kind == "conv":
+            fan_in = l.k * l.k * l.cin
+            w = jax.random.normal(k, (l.k, l.k, l.cin, l.cout)) * np.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((l.cout,))})
+        elif l.kind == "dwconv":
+            fan_in = l.k * l.k
+            w = jax.random.normal(k, (l.k, l.k, 1, l.cin)) * np.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((l.cin,))})
+        elif l.kind == "linear":
+            w = jax.random.normal(k, (l.cin, l.cout)) * np.sqrt(1.0 / l.cin)
+            params.append({"w": w, "b": jnp.zeros((l.cout,))})
+        elif l.kind == "se":
+            w1 = jax.random.normal(k, (l.cin, l.cout)) * np.sqrt(1.0 / l.cin)
+            w2 = jax.random.normal(jax.random.fold_in(k, 1), (l.cout, l.cin)) * np.sqrt(1.0 / l.cout)
+            params.append({"w1": w1, "b1": jnp.zeros((l.cout,)),
+                           "w2": w2, "b2": jnp.zeros((l.cin,))})
+        else:
+            params.append({})
+    return params
+
+
+def _apply_layer(l: ConvLayerDef, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    if l.kind == "conv":
+        pad = (l.k - 1) // 2
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], (l.stride, l.stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu6(x + p["b"])
+    if l.kind == "dwconv":
+        pad = (l.k - 1) // 2
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], (l.stride, l.stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=l.cin)
+        return jax.nn.relu6(x + p["b"])
+    if l.kind == "se":
+        g = jnp.mean(x, axis=(1, 2))
+        y = jax.nn.relu(g @ p["w1"] + p["b1"])
+        y = jax.nn.sigmoid(y @ p["w2"] + p["b2"])
+        return x * y[:, None, None, :]
+    if l.kind == "linear":
+        return x @ p["w"] + p["b"]
+    if l.kind == "pool":
+        return jnp.mean(x, axis=(1, 2)) if x.ndim == 4 else x
+    return x
+
+
+def forward_range(cfg: CNNConfig, params, x, start: int, stop: int):
+    """Run layers [start, stop). This is the partition-segment executor."""
+    for i in range(start, stop):
+        x = _apply_layer(cfg.layers[i], params[i], x)
+    return x
+
+
+def forward(cfg: CNNConfig, params, x):
+    return forward_range(cfg, params, x, 0, len(cfg.layers))
+
+
+def activation_bytes(cfg: CNNConfig, boundary: int, batch: int = 1,
+                     dtype_bytes: int = 4) -> int:
+    """Size of the tensor crossing a partition boundary before layer i —
+    the communication cost the green partitioner minimises."""
+    size = cfg.input_size
+    ch = cfg.input_channels
+    flat = False
+    for l in cfg.layers[:boundary]:
+        if l.kind in ("conv", "dwconv"):
+            size = -(-size // l.stride)
+            ch = l.cout if l.kind == "conv" else l.cin
+        elif l.kind == "pool":
+            flat = True
+        elif l.kind == "linear":
+            flat = True
+            ch = l.cout if l.cout != 0 else ch
+    n = ch if flat else size * size * ch
+    return n * batch * dtype_bytes

@@ -1,0 +1,32 @@
+"""Gated (SwiGLU) and plain MLP blocks."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, activation
+from repro.sharding.constraints import constrain
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: int, gated: bool) -> Dict:
+    D = cfg.d_model
+    spec = {
+        "w_up": ParamSpec((D, d_ff), ("embed", "ff")),
+        "w_down": ParamSpec((d_ff, D), ("ff", "embed")),
+    }
+    if gated:
+        spec["w_gate"] = ParamSpec((D, d_ff), ("embed", "ff"))
+    return spec
+
+
+def mlp_forward(cfg: ModelConfig, p, x, gated: bool):
+    act = activation(cfg.act)
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if gated:
+        up = up * act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    else:
+        up = act(up)
+    up = constrain(up, "batch", None, "ff")
+    return jnp.einsum("bsf,fd->bsd", up, p["w_down"])

@@ -1,0 +1,51 @@
+"""Global scan/unroll switch for roofline accounting.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so scanned layer stacks would be undercounted by ~num_layers in
+cost_analysis(). The dry-run accounting pass therefore lowers the step with
+all *structural* scans unrolled (layers, attention q-blocks, SSD chunks,
+loss chunks) at reduced repeat counts, and extrapolates linearly — see
+launch/dryrun.py. sLSTM's time recurrence is never unrolled (32k+ steps);
+its per-step cell cost is added analytically.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = False
+
+
+def unroll_enabled() -> bool:
+    return _UNROLL
+
+
+@contextmanager
+def unroll_scans():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(body, init, xs, length=None):
+    """lax.scan, or a Python loop when unroll mode is on."""
+    if not _UNROLL:
+        return jax.lax.scan(body, init, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        x = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        stacked = None
+    else:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD) block: chunked-parallel training form + O(1) decode.
+
+TPU adaptation: the chunked state-space-dual algorithm maps onto MXU
+einsums — intra-chunk (L x L) score matmuls and inter-chunk state
+recurrence via lax.scan. The per-chunk state update is also implemented as
+a Pallas kernel (kernels/mamba2_chunk.py); this jnp version is the oracle
+and the dry-run path.
+
+Shapes: inner = expand * d_model, H = inner / head_dim(P), groups G share
+B/C (GVA). conv_dim = inner + 2*G*N is depthwise-convolved causally.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import modes
+from repro.sharding.constraints import constrain
+from repro.models.common import ParamSpec, rms_norm
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    H = inner // s.head_dim
+    conv_dim = inner + 2 * s.num_groups * s.state_dim
+    return inner, H, conv_dim
+
+
+def mamba2_spec(cfg: ModelConfig) -> Dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    inner, H, conv_dim = dims(cfg)
+    G, N = s.num_groups, s.state_dim
+    proj_out = 2 * inner + 2 * G * N + H
+    return {
+        "in_proj": ParamSpec((D, proj_out), ("embed", "inner")),
+        "conv_w": ParamSpec((s.conv_width, conv_dim), ("conv", "inner")),
+        "conv_b": ParamSpec((conv_dim,), ("inner",), "zeros"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), "ones"),
+        "D_skip": ParamSpec((H,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), "zeros"),
+        "out_norm": ParamSpec((inner,), ("inner",), "zeros"),
+        "out_proj": ParamSpec((inner, D), ("inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    s = cfg.ssm
+    inner, H, _ = dims(cfg)
+    G, N = s.num_groups, s.state_dim
+    z, x, Bm, Cm, dt = jnp.split(
+        proj, [inner, 2 * inner, 2 * inner + G * N, 2 * inner + 2 * G * N], axis=-1
+    )
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x, w, b, width: int):
+    """Depthwise causal conv via shifted adds. x: (B,S,C), w: (width, C)."""
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _conv_step(x_new, conv_state, w, b):
+    """x_new: (B,C); conv_state: (B, width-1, C) holding previous inputs."""
+    full = jnp.concatenate([conv_state, x_new[:, None]], axis=1)  # (B,width,C)
+    y = jnp.einsum("bwc,wc->bc", full, w) + b
+    return jax.nn.silu(y), full[:, 1:]
+
+
+def mamba2_forward(cfg: ModelConfig, p, xin, return_state: bool = False):
+    """Full-sequence forward. xin: (B,S,D)."""
+    s = cfg.ssm
+    inner, H, conv_dim = dims(cfg)
+    G, N, P, L = s.num_groups, s.state_dim, s.head_dim, s.chunk_size
+    B_, S, _ = xin.shape
+
+    proj = jnp.einsum("bsd,dp->bsp", xin, p["in_proj"])
+    proj = constrain(proj, "batch", None, None)
+    z, x, Bm, Cm, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(jnp.concatenate([x, Bm, Cm], -1), p["conv_w"], p["conv_b"], s.conv_width)
+    x, Bm, Cm = jnp.split(xbc, [inner, inner + G * N], axis=-1)
+
+    xh = x.reshape(B_, S, H, P)
+    Bg = Bm.reshape(B_, S, G, N)
+    Cg = Cm.reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,) negative
+    dA = dt * A                                            # (B,S,H) log-decay
+
+    # Pad S to a multiple of chunk L.
+    pad = (-S) % L
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bg = jnp.pad(Bg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cg = jnp.pad(Cg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+    rs = lambda t: t.reshape((B_, nc, L) + t.shape[2:]).swapaxes(0, 1)
+    xc, Bc, Cc, dtc, dAc = map(rs, (xh, Bg, Cg, dt, dA))   # leading nc for scan
+
+    hg = H // G
+
+    def chunk_body(state, xs):
+        x_c, B_c, C_c, dt_c, dA_c = xs                     # (B,L,...)
+        cum = jnp.cumsum(dA_c, axis=1)                     # (B,L,H)
+        xdt = x_c * dt_c[..., None].astype(x_c.dtype)      # (B,L,H,P)
+        # Intra-chunk: scores[t,s] = (C_t . B_s) * exp(cum_t - cum_s), s<=t.
+        cb = jnp.einsum("blgn,bsgn->bgls", C_c, B_c)       # (B,G,L,L)
+        cb = jnp.repeat(cb, hg, axis=1)                    # (B,H,L,L)
+        dec = cum[:, :, None, :] - cum[:, None, :, :]      # (B,L,L,H) t,s
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        dec = jnp.where(mask[None, :, :, None], dec, -jnp.inf)
+        scores = cb * jnp.exp(dec).transpose(0, 3, 1, 2)   # (B,H,L,L)
+        y = jnp.einsum("bhls,bshp->blhp", scores.astype(x_c.dtype), xdt)
+        # Inter-chunk: contribution of carried state.
+        Ch = jnp.repeat(C_c, hg, axis=2) if G != H else C_c   # (B,L,H,N)
+        y = y + jnp.einsum("blhn,bhnp->blhp",
+                           (Ch * jnp.exp(cum)[..., None].astype(Ch.dtype)),
+                           state).astype(x_c.dtype)
+        # State update.
+        last = cum[:, -1]                                   # (B,H)
+        w_in = jnp.exp(last[:, None] - cum)                 # (B,L,H)
+        Bh = jnp.repeat(B_c, hg, axis=2) if G != H else B_c  # (B,L,H,N)
+        s_local = jnp.einsum("blhn,blhp->bhnp",
+                             Bh * w_in[..., None].astype(Bh.dtype), xdt)
+        state = jnp.exp(last)[..., None, None] * state + s_local.astype(jnp.float32)
+        # keep the carry's sharding identical to state0 (scan carry avals
+        # include shardings under sharding-in-types)
+        state = constrain(state, "batch", "ssm_heads", None, None)
+        return state, y
+
+    state0 = constrain(jnp.zeros((B_, H, N, P), jnp.float32),
+                       "batch", "ssm_heads", None, None)
+    final_state, ys = modes.scan(chunk_body, state0, (xc, Bc, Cc, dtc, dAc))
+    y = ys.swapaxes(0, 1).reshape(B_, Sp, H, P)[:, :S]
+    y = y + xh[:, :S] * p["D_skip"][None, None, :, None].astype(y.dtype)
+
+    y = y.reshape(B_, S, inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        return out, final_state
+    return out
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    inner, H, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, s.state_dim, s.head_dim), jnp.float32),
+    }
+
+
+def mamba2_prefill(cfg: ModelConfig, p, xin):
+    """Forward + cache for subsequent decode."""
+    s = cfg.ssm
+    inner, H, conv_dim = dims(cfg)
+    G, N = s.num_groups, s.state_dim
+    B_, S, _ = xin.shape
+    proj = jnp.einsum("bsd,dp->bsp", xin, p["in_proj"])
+    _, x, Bm, Cm, _ = _split_proj(cfg, proj)
+    pre_conv = jnp.concatenate([x, Bm, Cm], -1)            # (B,S,conv_dim)
+    w = s.conv_width - 1
+    tail = pre_conv[:, -w:] if S >= w else jnp.pad(pre_conv, ((0, 0), (w - S, 0), (0, 0)))
+    out, state = mamba2_forward(cfg, p, xin, return_state=True)
+    return out, {"conv": tail, "ssm": state}
+
+
+def mamba2_decode(cfg: ModelConfig, p, xin, cache):
+    """One step. xin: (B,1,D)."""
+    s = cfg.ssm
+    inner, H, conv_dim = dims(cfg)
+    G, N, P = s.num_groups, s.state_dim, s.head_dim
+    B_ = xin.shape[0]
+    proj = jnp.einsum("bd,dp->bp", xin[:, 0], p["in_proj"])
+    z, x, Bm, Cm, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _conv_step(jnp.concatenate([x, Bm, Cm], -1),
+                                 cache["conv"], p["conv_w"], p["conv_b"])
+    x, Bm, Cm = jnp.split(xbc, [inner, inner + G * N], axis=-1)
+    xh = x.reshape(B_, H, P)
+    Bg = Bm.reshape(B_, G, N)
+    Cg = Cm.reshape(B_, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                    # (B,H)
+    hg = H // G
+    Bh = jnp.repeat(Bg, hg, axis=1)
+    Ch = jnp.repeat(Cg, hg, axis=1)
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32),
+                     (xh * dt[..., None].astype(xh.dtype)).astype(jnp.float32))
+    state = a[..., None, None] * cache["ssm"] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+    y = y.astype(xh.dtype) + xh * p["D_skip"][None, :, None].astype(xh.dtype)
+    y = y.reshape(B_, inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None]
+    return out, {"conv": conv_state, "ssm": state}

@@ -1,0 +1,405 @@
+"""Model assembly: layer-pattern stacks scanned with lax.scan.
+
+The layer stack is ``pattern * repeats + suffix`` (configs/base.py). Params
+for each pattern position are stacked with a leading ``repeats`` dim and the
+stack is driven by one ``lax.scan`` — HLO size stays O(pattern), not
+O(num_layers), which keeps 62-layer compiles cheap and is also what the
+green partitioner reasons over.
+
+Public API:
+    model_spec / init_params / abstract_params / logical_axes
+    forward(cfg, params, batch)           -> (hidden, aux)    full sequence
+    unembed(cfg, params, hidden)          -> logits
+    init_cache / abstract_cache
+    prefill(cfg, params, batch, max_len)  -> (cache, last_hidden)
+    decode_step(cfg, params, cache, token, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerDef, ModelConfig
+from repro.models import attention, common, mlp, modes, moe, ssm, xlstm
+from repro.models.common import ParamSpec
+from repro.sharding.constraints import constrain
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def block_spec(cfg: ModelConfig, ld: LayerDef, decoder: bool) -> Dict:
+    D = cfg.d_model
+    if ld.kind == "attn":
+        spec = {"ln1": common.norm_spec(cfg, D), "attn": attention.attention_spec(cfg)}
+        if decoder and cfg.cross_attention:
+            spec["ln_x"] = common.norm_spec(cfg, D)
+            spec["xattn"] = attention.attention_spec(cfg)
+        if cfg.moe is not None:
+            spec["ln2"] = common.norm_spec(cfg, D)
+            spec["moe"] = moe.moe_spec(cfg)
+        elif cfg.d_ff > 0:
+            spec["ln2"] = common.norm_spec(cfg, D)
+            spec["mlp"] = mlp.mlp_spec(cfg, cfg.d_ff, cfg.mlp_gated)
+        return spec
+    if ld.kind == "mamba2":
+        return {"ln1": common.norm_spec(cfg, D), "mamba": ssm.mamba2_spec(cfg)}
+    if ld.kind == "mlstm":
+        return {"ln1": common.norm_spec(cfg, D), "mlstm": xlstm.mlstm_spec(cfg)}
+    if ld.kind == "slstm":
+        return {"ln1": common.norm_spec(cfg, D), "slstm": xlstm.slstm_spec(cfg)}
+    raise ValueError(ld.kind)
+
+
+def model_spec(cfg: ModelConfig) -> Dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    spec: Dict = {
+        "embedding": {"table": ParamSpec((V, D), ("vocab", "embed"), scale=0.02)},
+        "final_norm": common.norm_spec(cfg, D),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamSpec((D, V), ("embed", "vocab"))
+    # pattern positions, each stacked over repeats
+    spec["pattern"] = {
+        str(i): common.stack_spec(block_spec(cfg, ld, decoder=True), cfg.repeats)
+        for i, ld in enumerate(cfg.pattern)
+    }
+    if cfg.suffix:
+        spec["suffix"] = common.stack_spec(
+            block_spec(cfg, cfg.suffix[0], decoder=True), len(cfg.suffix))
+    if cfg.encoder_layers:
+        enc_ld = LayerDef("attn")
+        spec["encoder"] = common.stack_spec(
+            _encoder_block_spec(cfg), cfg.encoder_layers)
+        spec["encoder_norm"] = common.norm_spec(cfg, D)
+    return spec
+
+
+def _encoder_block_spec(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    return {
+        "ln1": common.norm_spec(cfg, D),
+        "attn": attention.attention_spec(cfg),
+        "ln2": common.norm_spec(cfg, D),
+        "mlp": mlp.mlp_spec(cfg, cfg.d_ff, cfg.mlp_gated),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    return common.init_from_spec(model_spec(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    return common.abstract_from_spec(model_spec(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def logical_axes(cfg: ModelConfig) -> PyTree:
+    return common.axes_from_spec(model_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _block_forward(cfg: ModelConfig, ld: LayerDef, p, h, ctx) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Residual block. ctx: dict(positions, mrope_pos, enc_kv_fn, causal)."""
+    aux = jnp.zeros((), jnp.float32)
+    if ld.kind == "attn":
+        h = h + attention.attn_forward(
+            cfg, p["attn"], common.apply_norm(cfg, p["ln1"], h),
+            causal=ctx.get("causal", True), window=ld.window,
+            positions=ctx.get("positions"), mrope_pos=ctx.get("mrope_pos"))
+        if "xattn" in p and ctx.get("enc_out") is not None:
+            xn = common.apply_norm(cfg, p["ln_x"], h)
+            ek, ev = attention.encode_kv(cfg, p["xattn"], ctx["enc_out"])
+            h = h + attention.cross_attn_forward(cfg, p["xattn"], xn, ek, ev)
+        if cfg.moe is not None:
+            y, aux = moe.moe_forward(cfg, p["moe"], common.apply_norm(cfg, p["ln2"], h))
+            h = h + y
+        elif cfg.d_ff > 0:
+            h = h + mlp.mlp_forward(cfg, p["mlp"], common.apply_norm(cfg, p["ln2"], h),
+                                    cfg.mlp_gated)
+    elif ld.kind == "mamba2":
+        h = h + ssm.mamba2_forward(cfg, p["mamba"], common.apply_norm(cfg, p["ln1"], h))
+    elif ld.kind == "mlstm":
+        h = h + xlstm.mlstm_forward(cfg, p["mlstm"], common.apply_norm(cfg, p["ln1"], h))
+    elif ld.kind == "slstm":
+        h = h + xlstm.slstm_forward(cfg, p["slstm"], common.apply_norm(cfg, p["ln1"], h))
+    else:
+        raise ValueError(ld.kind)
+    return h, aux
+
+
+def _scan_blocks(cfg: ModelConfig, defs, stacked_params, h, ctx):
+    """Scan the repeating unit over its stacked params."""
+
+    def body(carry, xs):
+        hh, aux_sum = carry
+        for i, ld in enumerate(defs):
+            hh, aux = _block_forward(cfg, ld, xs[str(i)], hh, ctx)
+            hh = constrain(hh, "batch", None, None)
+            aux_sum = aux_sum + aux
+        return (hh, aux_sum), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (h, aux), _ = modes.scan(body_fn, (h, jnp.zeros((), jnp.float32)), stacked_params)
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / inputs
+# ---------------------------------------------------------------------------
+
+
+def embed(cfg: ModelConfig, params, tokens):
+    h = params["embedding"]["table"].astype(jnp.dtype(cfg.dtype))[tokens]
+    return constrain(h, "batch", None, None)
+
+
+def unembed(cfg: ModelConfig, params, h):
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h, params["embedding"]["table"])
+    return jnp.einsum("...d,dv->...v", h, params["lm_head"])
+
+
+def _assemble_inputs(cfg: ModelConfig, params, batch):
+    """Returns (h, ctx) for the decoder stack."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    h = embed(cfg, params, tokens)
+    ctx: Dict = {"causal": True}
+    if cfg.vision_tokens:
+        ve = batch["vision_embeds"].astype(h.dtype)
+        h = jnp.concatenate([ve, h], axis=1)
+    S = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    ctx["positions"] = positions
+    if cfg.mrope_sections:
+        mp = batch.get("mrope_positions")
+        if mp is None:
+            mp = jnp.broadcast_to(positions[:, None, :], (B, 3, S))
+        ctx["mrope_pos"] = mp
+    if cfg.pos_emb == "sinusoidal":
+        h = h + common.sinusoidal_pos_emb(positions, cfg.d_model).astype(h.dtype)
+    if cfg.encoder_layers:
+        ctx["enc_out"] = encode(cfg, params, batch["encoder_embeds"])
+    return h, ctx
+
+
+def encode(cfg: ModelConfig, params, enc_embeds):
+    """Whisper-style encoder over stub frame embeddings."""
+    B, S, _ = enc_embeds.shape
+    h = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.pos_emb == "sinusoidal":
+        h = h + common.sinusoidal_pos_emb(pos, cfg.d_model).astype(h.dtype)
+    ctx = {"causal": False, "positions": pos}
+
+    def body(carry, xs):
+        hh = carry
+        hh = hh + attention.attn_forward(
+            cfg, xs["attn"], common.apply_norm(cfg, xs["ln1"], hh),
+            causal=False, window=None, positions=pos)
+        hh = hh + mlp.mlp_forward(cfg, xs["mlp"],
+                                  common.apply_norm(cfg, xs["ln2"], hh), cfg.mlp_gated)
+        return hh, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = modes.scan(body_fn, h, params["encoder"])
+    return common.apply_norm(cfg, params["encoder_norm"], h)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / eval)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h, ctx = _assemble_inputs(cfg, params, batch)
+    h, aux = _scan_blocks(cfg, cfg.pattern, params["pattern"], h, ctx)
+    if cfg.suffix:
+        h, aux2 = _scan_blocks(cfg, (cfg.suffix[0],), {"0": params["suffix"]},
+                               h, ctx)
+        aux = aux + aux2
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(cfg: ModelConfig, ld: LayerDef, batch: int, max_len: int, dtype):
+    if ld.kind == "attn":
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        c = {"k": jnp.zeros((batch, max_len, K, hd), dtype),
+             "v": jnp.zeros((batch, max_len, K, hd), dtype)}
+        if cfg.cross_attention:
+            c["xk"] = jnp.zeros((batch, cfg.encoder_seq, K, hd), dtype)
+            c["xv"] = jnp.zeros((batch, cfg.encoder_seq, K, hd), dtype)
+        return c
+    if ld.kind == "mamba2":
+        return ssm.mamba2_init_cache(cfg, batch, dtype)
+    if ld.kind == "mlstm":
+        return xlstm.mlstm_init_cache(cfg, batch, dtype)
+    if ld.kind == "slstm":
+        return xlstm.slstm_init_cache(cfg, batch, dtype)
+    raise ValueError(ld.kind)
+
+
+def _stack_cache(tree, n):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    cache: Dict = {"pattern": {
+        str(i): _stack_cache(_block_cache(cfg, ld, batch, max_len, dtype), cfg.repeats)
+        for i, ld in enumerate(cfg.pattern)
+    }}
+    if cfg.suffix:
+        cache["suffix"] = _stack_cache(
+            _block_cache(cfg, cfg.suffix[0], batch, max_len, dtype), len(cfg.suffix))
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def _block_prefill(cfg, ld, p, h, ctx, max_len):
+    if ld.kind == "attn":
+        y, (ck, cv) = attention.attn_prefill(
+            cfg, p["attn"], common.apply_norm(cfg, p["ln1"], h), max_len,
+            causal=True, window=ld.window,
+            positions=ctx.get("positions"), mrope_pos=ctx.get("mrope_pos"))
+        h = h + y
+        c = {"k": ck, "v": cv}
+        if "xattn" in p and ctx.get("enc_out") is not None:
+            xn = common.apply_norm(cfg, p["ln_x"], h)
+            ek, ev = attention.encode_kv(cfg, p["xattn"], ctx["enc_out"])
+            h = h + attention.cross_attn_forward(cfg, p["xattn"], xn, ek, ev)
+            c["xk"], c["xv"] = ek, ev
+        if cfg.moe is not None:
+            y, _ = moe.moe_forward(cfg, p["moe"], common.apply_norm(cfg, p["ln2"], h))
+            h = h + y
+        elif cfg.d_ff > 0:
+            h = h + mlp.mlp_forward(cfg, p["mlp"],
+                                    common.apply_norm(cfg, p["ln2"], h), cfg.mlp_gated)
+        return h, c
+    if ld.kind == "mamba2":
+        y, c = ssm.mamba2_prefill(cfg, p["mamba"], common.apply_norm(cfg, p["ln1"], h))
+        return h + y, c
+    if ld.kind == "mlstm":
+        y, c = xlstm.mlstm_forward(cfg, p["mlstm"],
+                                   common.apply_norm(cfg, p["ln1"], h), return_state=True)
+        return h + y, c
+    if ld.kind == "slstm":
+        y, c = xlstm.slstm_forward(cfg, p["slstm"],
+                                   common.apply_norm(cfg, p["ln1"], h), return_state=True)
+        return h + y, c
+    raise ValueError(ld.kind)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """Run the prompt, build the cache. Returns (cache, last_hidden)."""
+    h, ctx = _assemble_inputs(cfg, params, batch)
+
+    def body(hh, xs):
+        caches = {}
+        for i, ld in enumerate(cfg.pattern):
+            hh, c = _block_prefill(cfg, ld, xs[str(i)], hh, ctx, max_len)
+            caches[str(i)] = c
+        return hh, caches
+
+    h, pattern_cache = modes.scan(body, h, params["pattern"])
+    cache = {"pattern": pattern_cache}
+    if cfg.suffix:
+        def sbody(hh, xs):
+            hh, c = _block_prefill(cfg, cfg.suffix[0], xs, hh, ctx, max_len)
+            return hh, c
+        h, cache["suffix"] = modes.scan(sbody, h, params["suffix"])
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    return cache, h[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+
+def _block_decode(cfg, ld, p, c, h, pos, ctx):
+    if ld.kind == "attn":
+        xn = common.apply_norm(cfg, p["ln1"], h)
+        mrope = None
+        if cfg.mrope_sections:
+            B = h.shape[0]
+            mrope = jnp.broadcast_to(jnp.asarray(pos)[None, None, None], (B, 3, 1))
+        y, (ck, cv) = attention.attn_decode(
+            cfg, p["attn"], xn, (c["k"], c["v"]), pos, window=ld.window,
+            mrope_pos=mrope)
+        h = h + y
+        c = dict(c, k=ck, v=cv)
+        if "xattn" in p and "xk" in c:
+            xn = common.apply_norm(cfg, p["ln_x"], h)
+            h = h + attention.cross_attn_decode(cfg, p["xattn"], xn, (c["xk"], c["xv"]))
+        if cfg.moe is not None:
+            y, _ = moe.moe_forward(cfg, p["moe"], common.apply_norm(cfg, p["ln2"], h))
+            h = h + y
+        elif cfg.d_ff > 0:
+            h = h + mlp.mlp_forward(cfg, p["mlp"],
+                                    common.apply_norm(cfg, p["ln2"], h), cfg.mlp_gated)
+        return h, c
+    if ld.kind == "mamba2":
+        y, c = ssm.mamba2_decode(cfg, p["mamba"], common.apply_norm(cfg, p["ln1"], h), c)
+        return h + y, c
+    if ld.kind == "mlstm":
+        y, c = xlstm.mlstm_decode(cfg, p["mlstm"], common.apply_norm(cfg, p["ln1"], h), c)
+        return h + y, c
+    if ld.kind == "slstm":
+        y, c = xlstm.slstm_decode(cfg, p["slstm"], common.apply_norm(cfg, p["ln1"], h), c)
+        return h + y, c
+    raise ValueError(ld.kind)
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    """token: (B,1) int32; pos: scalar int32. Returns (logits (B,V), cache)."""
+    h = embed(cfg, params, token)
+    if cfg.pos_emb == "sinusoidal":
+        h = h + common.sinusoidal_pos_emb(
+            jnp.full((h.shape[0], 1), pos), cfg.d_model).astype(h.dtype)
+    ctx: Dict = {}
+
+    def body(hh, xs):
+        p, c = xs
+        new_c = {}
+        for i, ld in enumerate(cfg.pattern):
+            hh, nc = _block_decode(cfg, ld, p[str(i)], c[str(i)], hh, pos, ctx)
+            new_c[str(i)] = nc
+        return hh, new_c
+
+    h, new_pattern = modes.scan(body, h, (params["pattern"], cache["pattern"]))
+    new_cache = {"pattern": new_pattern}
+    if cfg.suffix:
+        def sbody(hh, xs):
+            p, c = xs
+            hh, nc = _block_decode(cfg, cfg.suffix[0], p, c, hh, pos, ctx)
+            return hh, nc
+        h, new_cache["suffix"] = modes.scan(sbody, (h), (params["suffix"], cache["suffix"]))
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    logits = unembed(cfg, params, h[:, 0])
+    return logits, new_cache

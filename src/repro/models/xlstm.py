@@ -1,0 +1,288 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential) per arXiv:2405.04517.
+
+mLSTM training uses the stabilized parallel form, chunked over query blocks
+(flash-attention-style) so the (S, S) gate-decay matrix is never fully
+materialised; decode is the O(1) recurrent form with a (head_dim x
+head_dim) matrix state per head. sLSTM is inherently sequential
+(lax.scan over time) — that is the architecture, not a limitation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import modes
+from repro.sharding.constraints import constrain
+from repro.models.common import ParamSpec, rms_norm
+
+NEG_INF = -1e30
+
+
+def mlstm_dims(cfg: ModelConfig):
+    inner = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+    H = cfg.xlstm.num_heads
+    return inner, H, inner // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    inner, H, hd = mlstm_dims(cfg)
+    x = cfg.xlstm
+    return {
+        "up_proj": ParamSpec((D, 2 * inner), ("embed", "inner")),
+        "conv_w": ParamSpec((x.conv_width, inner), ("conv", "inner")),
+        "conv_b": ParamSpec((inner,), ("inner",), "zeros"),
+        "wq": ParamSpec((inner, inner), ("inner", "heads_inner")),
+        "wk": ParamSpec((inner, inner), ("inner", "heads_inner")),
+        "wv": ParamSpec((inner, inner), ("inner", "heads_inner")),
+        "w_i": ParamSpec((inner, H), ("inner", "xlstm_heads")),
+        "b_i": ParamSpec((H,), ("xlstm_heads",), "zeros"),
+        "w_f": ParamSpec((inner, H), ("inner", "xlstm_heads")),
+        "b_f": ParamSpec((H,), ("xlstm_heads",), "ones"),
+        "out_norm": ParamSpec((inner,), ("inner",), "zeros"),
+        "down_proj": ParamSpec((inner, D), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, width: int):
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _mlstm_qkvif(cfg, p, x_m):
+    """x_m: (B,S,inner) -> q,k,v (B,S,H,hd), i,f tilde (B,S,H) fp32."""
+    inner, H, hd = mlstm_dims(cfg)
+    B, S, _ = x_m.shape
+    x_c = _causal_conv(x_m, p["conv_w"], p["conv_b"], cfg.xlstm.conv_width)
+    q = jnp.einsum("bsi,ij->bsj", x_c, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsi,ij->bsj", x_c, p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsi,ij->bsj", x_m, p["wv"]).reshape(B, S, H, hd)
+    it = (jnp.einsum("bsi,ih->bsh", x_m, p["w_i"]) + p["b_i"]).astype(jnp.float32)
+    ft = (jnp.einsum("bsi,ih->bsh", x_m, p["w_f"]) + p["b_f"]).astype(jnp.float32)
+    return q, k, v, it, ft
+
+
+def _mlstm_parallel(q, k, v, it, ft, q_block: int = 1024):
+    """Stabilized parallel mLSTM. q,k,v: (B,S,H,hd); it,ft: (B,S,H)."""
+    B, S, H, hd = q.shape
+    logf = jax.nn.log_sigmoid(ft)                      # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)                       # inclusive cumsum
+
+    def block(qb, Fq, start, sq):
+        # log D[t,s] = F_t - F_s + logf_s? standard: D = F_t - F_s + i_s with
+        # F the cumsum *inclusive of t*, decay product over (s, t] = F_t - F_s.
+        logD = (Fq[:, :, None, :] - F[:, None, :, :] + it[:, None, :, :])
+        ti = start + jnp.arange(sq)[:, None]
+        si = jnp.arange(S)[None, :]
+        mask = si <= ti
+        logD = jnp.where(mask[None, :, :, None], logD, NEG_INF)
+        m = jnp.max(logD, axis=2, keepdims=True)       # (B,sq,1,H)
+        m = jnp.maximum(m, -50.0)
+        Dmat = jnp.exp(logD - m)                       # (B,sq,S,H)
+        scores = jnp.einsum("bthk,bshk->bhts", qb, k).astype(jnp.float32)
+        scores = scores * (hd ** -0.5) * Dmat.transpose(0, 3, 1, 2)
+        norm = jnp.abs(jnp.sum(scores, axis=-1))       # (B,H,sq)
+        norm = jnp.maximum(norm, jnp.exp(-m[:, :, 0, :]).transpose(0, 2, 1))
+        out = jnp.einsum("bhts,bshk->bthk", (scores / norm[..., None]).astype(v.dtype), v)
+        return out
+
+    if S <= q_block:
+        return block(q, F, 0, S)
+    nb = S // q_block
+
+    def body(_, i):
+        start = i * q_block
+        qb = jax.lax.dynamic_slice_in_dim(q, start, q_block, 1)
+        Fq = jax.lax.dynamic_slice_in_dim(F, start, q_block, 1)
+        return None, block(qb, Fq, start, q_block)
+
+    _, outs = modes.scan(body, None, jnp.arange(nb))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nb * q_block, H, hd)
+    rem = S - nb * q_block
+    if rem:
+        out = jnp.concatenate(
+            [out, block(q[:, -rem:], F[:, -rem:], nb * q_block, rem)], axis=1)
+    return out
+
+
+def mlstm_forward(cfg: ModelConfig, p, xin, return_state: bool = False):
+    inner, H, hd = mlstm_dims(cfg)
+    B, S, _ = xin.shape
+    up = constrain(jnp.einsum("bsd,di->bsi", xin, p["up_proj"]),
+                   "batch", None, None)
+    x_m, z = jnp.split(up, 2, axis=-1)
+    q, k, v, it, ft = _mlstm_qkvif(cfg, p, x_m)
+    h = _mlstm_parallel(q, k, v, it, ft)
+    h = h.reshape(B, S, inner)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", h, p["down_proj"])
+    if not return_state:
+        return out
+    # Final recurrent state for decode handoff.
+    logf = jax.nn.log_sigmoid(ft)
+    F = jnp.cumsum(logf, axis=1)
+    w_log = F[:, -1:, :] - F + it                      # (B,S,H)
+    m_fin = jnp.maximum(jnp.max(w_log, axis=1), -50.0)  # (B,H)
+    w = jnp.exp(w_log - m_fin[:, None, :])
+    C = jnp.einsum("bshk,bshn->bhkn", (k * w[..., None]).astype(jnp.float32) * (hd ** -0.5),
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bshk,bsh->bhk", k.astype(jnp.float32) * (hd ** -0.5), w)
+    # conv tail
+    cw = cfg.xlstm.conv_width - 1
+    tail = x_m[:, -cw:] if S >= cw else jnp.pad(x_m, ((0, 0), (cw - S, 0), (0, 0)))
+    state = {"C": C, "n": n, "m": m_fin, "conv": tail}
+    return out, state
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    inner, H, hd = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -50.0, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_width - 1, inner), dtype),
+    }
+
+
+def mlstm_decode(cfg: ModelConfig, p, xin, cache):
+    """xin: (B,1,D)."""
+    inner, H, hd = mlstm_dims(cfg)
+    B = xin.shape[0]
+    up = jnp.einsum("bsd,di->bsi", xin[:, 0][:, None], p["up_proj"])[:, 0]
+    x_m, z = jnp.split(up, 2, axis=-1)
+    full = jnp.concatenate([cache["conv"], x_m[:, None]], axis=1)
+    x_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", full, p["conv_w"]) + p["conv_b"])
+    q = jnp.einsum("bi,ij->bj", x_c, p["wq"]).reshape(B, H, hd)
+    k = jnp.einsum("bi,ij->bj", x_c, p["wk"]).reshape(B, H, hd)
+    v = jnp.einsum("bi,ij->bj", x_m, p["wv"]).reshape(B, H, hd)
+    it = (jnp.einsum("bi,ih->bh", x_m, p["w_i"]) + p["b_i"]).astype(jnp.float32)
+    ft = (jnp.einsum("bi,ih->bh", x_m, p["w_f"]) + p["b_f"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + cache["m"], it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + cache["m"] - m_new)
+    ks = k.astype(jnp.float32) * (hd ** -0.5)
+    C = f_s[..., None, None] * cache["C"] + i_s[..., None, None] * jnp.einsum(
+        "bhk,bhn->bhkn", ks, v.astype(jnp.float32))
+    n = f_s[..., None] * cache["n"] + i_s[..., None] * ks
+    num = jnp.einsum("bhk,bhkn->bhn", q.astype(jnp.float32), C)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(xin.dtype).reshape(B, inner)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", h, p["down_proj"])[:, None]
+    return out, {"C": C, "n": n, "m": m_new, "conv": full[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_dims(cfg: ModelConfig):
+    H = cfg.xlstm.num_heads
+    return H, cfg.d_model // H
+
+
+def slstm_spec(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    H, hd = slstm_dims(cfg)
+    ff = int(cfg.xlstm.slstm_proj_factor * D)
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[f"w_{g}"] = ParamSpec((D, H, hd), ("embed", "xlstm_heads", "head_dim"))
+        gates[f"r_{g}"] = ParamSpec((H, hd, hd), ("xlstm_heads", "head_dim", "head_dim"))
+        gates[f"b_{g}"] = ParamSpec((H, hd), ("xlstm_heads", "head_dim"),
+                                    "ones" if g == "f" else "zeros")
+    return {
+        **gates,
+        "out_norm": ParamSpec((D,), ("norm",), "zeros"),
+        "ffn_up": ParamSpec((D, ff), ("embed", "ff")),
+        "ffn_gate": ParamSpec((D, ff), ("embed", "ff")),
+        "ffn_down": ParamSpec((ff, D), ("ff", "embed")),
+    }
+
+
+def _slstm_step(p, carry, x_t):
+    """carry: (c,n,h,m) each (B,H,hd); x_t pre-projected gates (B,H,hd,4)."""
+    c, n, h, m = carry
+    rec = lambda g: jnp.einsum("bhk,hkj->bhj", h, p[f"r_{g}"])
+    xi, xf, xz, xo = [x_t[..., i] for i in range(4)]
+    it = (xi + rec("i")).astype(jnp.float32)
+    ft = (xf + rec("f")).astype(jnp.float32)
+    zt = jnp.tanh((xz + rec("z")).astype(jnp.float32))
+    ot = jax.nn.sigmoid((xo + rec("o")).astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * zt
+    n_new = f_s * n + i_s
+    h_new = (ot * c_new / jnp.maximum(n_new, 1e-6)).astype(h.dtype)
+    return (c_new, n_new, h_new, m_new)
+
+
+def _slstm_pre(cfg, p, x):
+    """Project inputs for all 4 gates: (B,S,H,hd,4)."""
+    gs = [jnp.einsum("bsd,dhk->bshk", x, p[f"w_{g}"]) + p[f"b_{g}"]
+          for g in ("i", "f", "z", "o")]
+    return jnp.stack(gs, axis=-1)
+
+
+def slstm_forward(cfg: ModelConfig, p, xin, return_state: bool = False):
+    H, hd = slstm_dims(cfg)
+    B, S, D = xin.shape
+    xg = _slstm_pre(cfg, p, xin)                       # (B,S,H,hd,4)
+
+    def body(carry, x_t):
+        new = _slstm_step(p, carry, x_t)
+        return new, new[2]
+
+    init = (jnp.zeros((B, H, hd), jnp.float32), jnp.zeros((B, H, hd), jnp.float32),
+            jnp.zeros((B, H, hd), xin.dtype), jnp.full((B, H, hd), -50.0, jnp.float32))
+    final, hs = jax.lax.scan(body, init, xg.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, S, D)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    ff = jnp.einsum("bsf,fd->bsd",
+                    jnp.einsum("bsd,df->bsf", y, p["ffn_up"]) *
+                    jax.nn.silu(jnp.einsum("bsd,df->bsf", y, p["ffn_gate"])),
+                    p["ffn_down"])
+    out = y + ff
+    if return_state:
+        return out, {"c": final[0], "n": final[1], "h": final[2], "m": final[3]}
+    return out
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    H, hd = slstm_dims(cfg)
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(),
+            "h": jnp.zeros((batch, H, hd), dtype),
+            "m": jnp.full((batch, H, hd), -50.0, jnp.float32)}
+
+
+def slstm_decode(cfg: ModelConfig, p, xin, cache):
+    H, hd = slstm_dims(cfg)
+    B, _, D = xin.shape
+    xg = _slstm_pre(cfg, p, xin)[:, 0]                 # (B,H,hd,4)
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_step(p, carry, xg)
+    y = h.reshape(B, 1, D)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    ff = jnp.einsum("bsf,fd->bsd",
+                    jnp.einsum("bsd,df->bsf", y, p["ffn_up"]) *
+                    jax.nn.silu(jnp.einsum("bsd,df->bsf", y, p["ffn_gate"])),
+                    p["ffn_down"])
+    return y + ff, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,52 @@
+"""Chunked cross-entropy: 256k-vocab logits are never fully materialised.
+
+The (B, S, V) logits tensor for command-r at train_4k would be
+256 x 4096 x 256000 x 4B ≈ 1 TB global; instead we scan over sequence
+chunks, computing (B, chunk, V) logits per step and accumulating the loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import modes, transformer
+
+CHUNK = 512
+
+
+def _ce(cfg, params, h_chunk, labels_chunk, mask_chunk):
+    from repro.sharding.constraints import constrain
+
+    logits = transformer.unembed(cfg, params, h_chunk).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "vocab")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_chunk[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask_chunk
+    return jnp.sum(nll), jnp.sum(mask_chunk)
+
+
+def chunked_ce(cfg: ModelConfig, params, hidden, labels, mask=None):
+    """hidden: (B,S,D); labels: (B,S) int32; mask: (B,S) or None."""
+    B, S, _ = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    chunk = min(CHUNK, S)
+    nb = S // chunk
+
+    def body(carry, i):
+        tot, cnt = carry
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
+        l = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        m = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
+        s, c = _ce(cfg, params, h, l, m)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = modes.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(nb))
+    rem = S - nb * chunk
+    if rem:
+        s, c = _ce(cfg, params, hidden[:, -rem:], labels[:, -rem:], mask[:, -rem:])
+        tot, cnt = tot + s, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)

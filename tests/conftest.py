@@ -1,0 +1,9 @@
+import os
+
+# Keep tests single-device (the dry-run sets its own 512-device flag in a
+# subprocess; see test_dryrun_small.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,96 @@
+"""Multi-tenant carbon budgets (paper §V future work)."""
+import numpy as np
+import pytest
+
+from repro.core.budget import BudgetedRouter
+from repro.core.energy import RooflineTerms
+from repro.core.router import GreenRouter, PodSpec
+
+PODS = [
+    PodSpec("pod-high", 256, "coal", 620.0),
+    PodSpec("pod-green", 256, "hydro", 380.0),
+]
+TERMS = RooflineTerms(0.010, 0.004, 0.002)   # 10 ms compute-bound step
+
+
+def make(alloc_a=1.0, alloc_b=1.0):
+    router = GreenRouter(PODS, mode="performance")
+    router.seed_profile({p.name: TERMS for p in PODS})
+    br = BudgetedRouter(router)
+    br.register_tenant("a", alloc_a)
+    br.register_tenant("b", alloc_b)
+    return br
+
+
+def test_admission_and_charging():
+    br = make(alloc_a=10.0)
+    res = br.admit("a", TERMS)
+    assert res.admitted and res.pod is not None
+    c = br.commit("a", res.pod, TERMS)
+    assert c > 0
+    assert abs(br.tenants["a"].spent_g - c) < 1e-12
+
+
+def test_budget_exhaustion_denies():
+    # one step emits ~ 256 chips * 230 W * 0.01 s -> ~1.6e-4 kWh * I
+    br = make(alloc_a=1e-5)
+    res1 = br.admit("a", TERMS)
+    assert not res1.admitted
+    assert br.tenants["a"].denied == 1
+
+
+def test_escalation_to_green():
+    br = make(alloc_a=10.0)
+    # drain past 80% (remaining still covers a green step, ~0.06 g)
+    br.tenants["a"].spent_g = 8.5
+    res = br.admit("a", TERMS)
+    assert res.admitted
+    assert res.mode == "green"
+    assert res.pod == "pod-green"
+
+
+def test_escalation_to_balanced():
+    br = make(alloc_a=10.0)
+    br.tenants["a"].spent_g = 6.5   # 65% utilisation
+    res = br.admit("a", TERMS)
+    assert res.mode == "balanced"
+
+
+def test_low_utilisation_keeps_performance_mode():
+    br = make(alloc_a=100.0)
+    res = br.admit("a", TERMS)
+    assert res.mode == "performance"
+
+
+def test_tenants_isolated():
+    br = make(alloc_a=1e-5, alloc_b=10.0)
+    r_a = br.admit("a", TERMS)
+    r_b = br.admit("b", TERMS)
+    assert not r_a.admitted and r_b.admitted
+    br.commit("b", r_b.pod, TERMS)
+    assert br.tenants["a"].spent_g == 0.0
+    assert br.tenants["b"].spent_g > 0.0
+
+
+def test_near_exhaustion_falls_back_to_greenest():
+    """If the routed pod exceeds the remainder but the greenest pod fits,
+    admit there instead of denying."""
+    br = make(alloc_a=1.0)
+    from repro.core import energy
+
+    exp_high = energy.carbon_g(energy.step_energy_kwh(TERMS, 256, 200.0), 620.0)
+    exp_green = energy.carbon_g(energy.step_energy_kwh(TERMS, 256, 200.0), 380.0)
+    br.tenants["a"].spent_g = 1.0 - (exp_high + exp_green) / 2
+    res = br.admit("a", TERMS)
+    assert res.admitted
+    assert res.pod == "pod-green"
+
+
+def test_report():
+    br = make()
+    res = br.admit("a", TERMS)
+    br.commit("a", res.pod, TERMS)
+    rep = br.report()
+    assert rep["a"]["admitted"] == 1
+    assert rep["a"]["spent_g"] > 0
+    assert 0 <= rep["a"]["utilisation"] <= 1.0

@@ -1,0 +1,90 @@
+"""Carbon monitor (Eq. 1/2), energy/roofline model, cluster accounting."""
+import numpy as np
+import pytest
+
+from repro.core import energy
+from repro.core.carbon import RAM_W_PER_GB, CarbonMonitor, WallClockEnergyTracker
+from repro.core.cluster import EdgeCluster, PAPER_NODES
+from repro.core.router import GreenRouter, PodSpec
+
+
+def test_eq1_eq2():
+    m = CarbonMonitor()
+    m.register_region("r", intensity=500.0, pue=1.2)
+    # 100 W for 36 s = 1 Wh = 1e-3 kWh; x500 x1.2 = 0.6 g
+    c = m.record_power_sample("r", dt_s=36.0, p_cpu_w=100.0)
+    assert abs(c - 0.6) < 1e-9
+    assert abs(m.total_energy_kwh() - 1e-3) < 1e-12
+
+
+def test_ram_power_coefficient():
+    m = CarbonMonitor()
+    m.register_region("r", intensity=1000.0)
+    c = m.record_power_sample("r", dt_s=3600.0, ram_gb=8.0)
+    # 8 GB * 0.375 W = 3 W for 1h = 3 Wh = 3e-3 kWh -> 3 g at 1000
+    assert abs(c - 3e-3 * 1000.0 * 1e0) < 1e-9 or abs(c - 3.0) < 1e-9
+
+
+def test_roofline_terms():
+    t = energy.roofline(flops=197e12 * 256, bytes_hbm=819e9 * 256,
+                        bytes_collective=50e9 * 256, chips=256)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 1.0) < 1e-9
+    assert abs(t.collective_s - 1.0) < 1e-9
+    assert t.step_time_s == 1.0
+
+
+def test_roofline_bottleneck():
+    t = energy.roofline(1e12, 1e15, 1e9, chips=1)
+    assert t.bottleneck == "memory"
+    t = energy.roofline(1e18, 1e9, 1e9, chips=1)
+    assert t.bottleneck == "compute"
+
+
+def test_step_energy():
+    t = energy.RooflineTerms(1.0, 0.5, 0.2)
+    e = energy.step_energy_kwh(t, chips=100, chip_power_w=200.0,
+                               host_overhead_w=0.0)
+    # 100 chips * 200 W * 1 s = 20000 J = 20000/3.6e6 kWh
+    assert abs(e - 20000 / 3.6e6) < 1e-12
+
+
+def test_cluster_accounting_matches_paper_numbers():
+    c = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
+    c.profile(254.85)
+    r = c.execute("node-medium", 254.85, distributed=False)
+    assert abs(r.carbon_g - 0.0053) < 2e-4          # paper Table II mono
+    r = c.execute("node-green", 254.85, distributed=True)
+    assert abs(r.carbon_g - 0.0041) < 2e-4          # paper Table II green
+
+
+def test_apportionment_by_quota():
+    c = EdgeCluster(nodes=PAPER_NODES)
+    shares = c.apportion(window_energy_kwh=2.0)
+    # quotas 1.0/0.6/0.4 of 2.0 total
+    assert abs(shares["node-high"] - 1.0) < 1e-9
+    assert abs(shares["node-medium"] - 0.6) < 1e-9
+    assert abs(shares["node-green"] - 0.4) < 1e-9
+
+
+def test_wallclock_tracker():
+    m = CarbonMonitor()
+    m.register_region("here", 400.0)
+    with WallClockEnergyTracker(m, "here", power_w=100.0) as t:
+        x = sum(range(10000))
+    assert t.elapsed_s > 0
+    assert t.carbon_g >= 0
+    assert m.regions["here"].tasks == 1
+
+
+def test_green_router_prefers_green_pod():
+    pods = [PodSpec("a", 256, "coal", 620.0),
+            PodSpec("b", 256, "hydro", 380.0)]
+    router = GreenRouter(pods, mode="green")
+    terms = energy.RooflineTerms(0.01, 0.02, 0.005)
+    router.seed_profile({"a": terms, "b": terms})
+    choice = router.route()
+    assert choice == "b"
+    c = router.commit(choice, terms)
+    assert c > 0
+    assert router.monitor.regions["b"].tasks == 1

@@ -1,0 +1,58 @@
+"""Paper-validation: the benchmark suite must land in the paper's bands."""
+import numpy as np
+import pytest
+
+from benchmarks import (common, fig2_tradeoff, fig3_weight_sweep, overhead,
+                        table2_carbon_footprint, table4_multi_model,
+                        table5_node_distribution)
+
+
+def test_table2_green_reduction_band():
+    out = table2_carbon_footprint.run()
+    red = out["ce-green"]["reduction_vs_mono_pct"]
+    assert 18.0 < red < 28.0, red         # paper: 22.9%
+    # performance/balanced INCREASE emissions (paper: -26.7% / -24.7%)
+    assert out["ce-performance"]["reduction_vs_mono_pct"] < -15.0
+    assert out["ce-balanced"]["reduction_vs_mono_pct"] < -15.0
+
+
+def test_table2_absolute_carbon():
+    out = table2_carbon_footprint.run()
+    assert abs(out["monolithic"]["carbon_g_per_inf"] - 0.0053) < 3e-4
+    assert abs(out["ce-green"]["carbon_g_per_inf"] - 0.0041) < 3e-4
+
+
+def test_table4_multi_model_band():
+    out = table4_multi_model.run()
+    for model, r in out.items():
+        assert 10.0 < r["reduction_pct"] < 35.0, (model, r)  # paper range
+
+
+def test_table5_node_distribution():
+    out = table5_node_distribution.run()
+    assert out["performance"]["node-high"] == 100.0
+    assert out["balanced"]["node-high"] == 100.0
+    assert out["green"]["node-green"] == 100.0
+
+
+def test_fig2_carbon_efficiency():
+    out = fig2_tradeoff.run()
+    assert 1.2 < out["improvement_x"] < 1.45            # paper: 1.30x
+    green = out["ce-green"]["carbon_eff_inf_per_g"]
+    assert 225 < green < 265                            # paper: 245.8
+    # latency overhead < ~7% (paper claim)
+    for k in ("ce-performance", "ce-balanced", "ce-green"):
+        assert out[k]["latency_overhead_pct"] < 8.0
+
+
+def test_fig3_transition():
+    out = fig3_weight_sweep.run("mobilenetv2",
+                                points=np.arange(0.0, 0.95, 0.05))
+    assert out["transition_w_c"] is not None
+    assert 0.35 <= out["transition_w_c"] <= 0.55        # paper: 0.50
+
+
+def test_scheduler_overhead():
+    out = overhead.run()
+    # paper: 0.03 ms/task; allow generous CPU headroom
+    assert out["per_task_ms"] < 0.5

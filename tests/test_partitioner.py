@@ -1,0 +1,98 @@
+"""Green partitioner: Eq. 5 cost model + DP partition semantics."""
+import numpy as np
+import pytest
+
+from repro.configs.base import ConvLayerDef
+from repro.configs.cnn_zoo import get_cnn_config
+from repro.configs.registry import get_config
+from repro.core import costmodel
+from repro.core.partitioner import (Partition, capacity_weights,
+                                    green_weights, partition_cnn,
+                                    partition_costs, partition_transformer)
+
+
+def test_eq5_conv():
+    assert costmodel.cnn_layer_cost(ConvLayerDef("conv", 3, 32, 3, 2)) == 3 * 3 * 3 * 32
+
+
+def test_eq5_linear():
+    assert costmodel.cnn_layer_cost(ConvLayerDef("linear", 1280, 1000)) == 1280 * 1000
+
+
+def test_eq5_others_params_count():
+    se = ConvLayerDef("se", 96, 24)
+    assert costmodel.cnn_layer_cost(se) == 2 * 96 * 24 + 96 + 24
+    assert costmodel.cnn_layer_cost(ConvLayerDef("pool", 128, 128)) == 0.0
+
+
+def test_partition_covers_all_layers():
+    costs = list(np.random.default_rng(0).uniform(1, 10, size=40))
+    p = partition_costs(costs, [1.0, 1.0, 1.0])
+    assert p.boundaries[0] == 0 and p.boundaries[-1] == 40
+    assert all(a < b for a, b in zip(p.boundaries, p.boundaries[1:]))
+    assert abs(sum(p.segment_costs) - sum(costs)) < 1e-6
+
+
+def test_partition_balances_equal_nodes():
+    costs = [1.0] * 30
+    p = partition_costs(costs, [1.0, 1.0, 1.0])
+    assert p.segment_costs == (10.0, 10.0, 10.0)
+
+
+def test_partition_respects_capacity():
+    costs = [1.0] * 30
+    p = partition_costs(costs, [2.0, 1.0])
+    # 2:1 split
+    assert p.segment_costs == (20.0, 10.0)
+
+
+def test_comm_weight_moves_boundary():
+    """Cheap cut points attract boundaries when comm cost matters."""
+    costs = [1.0] * 10
+    bb = [0.0] + [100.0] * 4 + [0.0] + [100.0] * 4 + [0.0]  # cheap cut at 5
+    p_free = partition_costs(costs, [1.0, 1.0], bb, comm_weight=0.0)
+    p_comm = partition_costs(costs, [1.0, 1.0], bb, comm_weight=1.0)
+    assert p_comm.boundaries[1] == 5
+    assert abs(sum(p_comm.segment_costs) - 10.0) < 1e-9
+
+
+def test_green_weights_prefer_low_carbon():
+    cap = capacity_weights([1.0, 1.0])
+    g = green_weights([1.0, 1.0], [620.0, 380.0], carbon_weight=0.5)
+    assert g[1] > g[0]
+    # and a full-capacity bias at carbon_weight=0 reduces to capacity
+    g0 = green_weights([1.0, 0.5], [620.0, 380.0], carbon_weight=0.0)
+    np.testing.assert_allclose(g0 / g0.sum(), cap_norm([1.0, 0.5]))
+
+
+def cap_norm(c):
+    c = np.asarray(c, float)
+    return c / c.sum()
+
+
+def test_partition_cnn_executable():
+    cfg = get_cnn_config("mobilenetv2")
+    p = partition_cnn(cfg, [1.0, 1.0, 1.0])
+    assert p.num_segments == 3
+    assert p.boundaries[-1] == len(cfg.layers)
+
+
+@pytest.mark.parametrize("arch", ["zamba2-2.7b", "gemma3-27b", "arctic-480b"])
+def test_partition_transformer(arch):
+    cfg = get_config(arch)
+    p = partition_transformer(cfg, [1.0, 0.6, 0.4], seq=4096, batch=1)
+    assert p.boundaries[-1] == cfg.num_layers
+    assert p.num_segments == 3
+    # heavier-weighted node gets >= cost share of the lightest
+    assert p.segment_costs[0] >= p.segment_costs[2] * 0.5
+
+
+def test_moe_active_cost_used():
+    """Partitioner costs MoE blocks by ACTIVE params (top-k), not total."""
+    cfg = get_config("arctic-480b")
+    ld = cfg.layer_defs[0]
+    total = costmodel.block_params(cfg, ld, active_only=False)
+    active = costmodel.block_params(cfg, ld, active_only=True)
+    assert active < 0.1 * total
+    f = costmodel.block_flops(cfg, ld, seq=1024, batch=1)
+    assert f < 2.5 * 1024 * active * 1.2

@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import EdgeCluster, NodeSpec
+from repro.core.partitioner import green_weights, partition_costs
+from repro.core.scheduler import MODES, Task, Weights, scores, select_node
+
+SET = settings(max_examples=50, deadline=None)
+
+
+def cluster_from(cpus, mems, intensities):
+    nodes = [NodeSpec(f"n{i}", c, m, it)
+             for i, (c, m, it) in enumerate(zip(cpus, mems, intensities))]
+    c = EdgeCluster(nodes=nodes, host_power_w=142.0)
+    c.profile(250.0)
+    return c
+
+
+@SET
+@given(
+    cpus=st.lists(st.floats(0.1, 4.0), min_size=2, max_size=6),
+    intensity=st.lists(st.floats(10.0, 1200.0), min_size=2, max_size=6),
+)
+def test_scores_bounded(cpus, intensity):
+    n = min(len(cpus), len(intensity))
+    c = cluster_from(cpus[:n], [1024] * n, intensity[:n])
+    task = Task(cpu=0.05, mem_mb=16, base_latency_ms=250.0)
+    for stt in c.nodes.values():
+        s = scores(stt, task, c.host_power_w)
+        assert np.all(s >= 0.0) and np.all(s <= 1.0)
+
+
+@SET
+@given(intensities=st.lists(st.floats(10.0, 1200.0), min_size=3, max_size=3,
+                            unique=True))
+def test_green_mode_picks_lowest_carbon_when_equal_otherwise(intensities):
+    """With identical cpu/mem/history, green mode must select (near-)min
+    intensity — ties at float resolution may pick either."""
+    c = cluster_from([1.0, 1.0, 1.0], [1024] * 3, intensities)
+    task = Task(cpu=0.05, mem_mb=16, base_latency_ms=250.0)
+    chosen = select_node(c, task, MODES["green"])
+    chosen_i = intensities[int(chosen[1:])]
+    assert chosen_i <= min(intensities) * (1 + 1e-9) + 1e-9
+
+
+@SET
+@given(
+    costs=st.lists(st.floats(0.1, 100.0), min_size=3, max_size=60),
+    k=st.integers(2, 4),
+)
+def test_partition_is_exact_cover(costs, k):
+    if len(costs) < k:
+        return
+    p = partition_costs(costs, [1.0] * k)
+    assert p.boundaries[0] == 0
+    assert p.boundaries[-1] == len(costs)
+    assert list(p.boundaries) == sorted(set(p.boundaries))
+    assert abs(sum(p.segment_costs) - sum(costs)) < 1e-6 * max(1, sum(costs))
+
+
+@SET
+@given(
+    cpus=st.lists(st.floats(0.2, 2.0), min_size=2, max_size=5),
+    scale=st.floats(1.1, 5.0),
+)
+def test_green_weights_monotone_in_intensity(cpus, scale):
+    """Raising one node's carbon intensity never raises its green weight."""
+    n = len(cpus)
+    base_i = [500.0] * n
+    w0 = green_weights(cpus, base_i)
+    hi = list(base_i)
+    hi[0] *= scale
+    w1 = green_weights(cpus, hi)
+    assert w1[0] / w1.sum() <= w0[0] / w0.sum() + 1e-12
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(4, 64),
+       k=st.integers(2, 4))
+def test_moe_routing_properties(seed, t, k):
+    """Router invariants: weights positive, sum to 1, indices valid+unique."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import MoEConfig
+    from repro.configs.registry import reduced_config
+    from repro.models import moe as moe_mod
+
+    cfg = reduced_config("qwen2-moe-a2.7b")
+    cfg = cfg.with_overrides(moe=MoEConfig(num_experts=8, top_k=k, expert_ff=64))
+    key = jax.random.PRNGKey(seed)
+    router_w = jax.random.normal(key, (cfg.d_model, 8)) * 0.5
+    x = jax.random.normal(jax.random.fold_in(key, 1), (t, cfg.d_model))
+    w, idx, aux = moe_mod.route(cfg, router_w, x)
+    assert w.shape == (t, k) and idx.shape == (t, k)
+    assert bool(jnp.all(w >= 0))
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, atol=1e-5)
+    assert bool(jnp.all((idx >= 0) & (idx < 8)))
+    # top-k indices unique per token
+    srt = np.sort(np.asarray(idx), axis=1)
+    assert np.all(srt[:, 1:] != srt[:, :-1])
+    assert float(aux) >= 0.0
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1))
+def test_moe_combine_conserves_without_drops(seed):
+    """With generous capacity, every token's output is a convex combination
+    of expert outputs — identity experts must return the input."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import MoEConfig
+    from repro.configs.registry import reduced_config
+    from repro.models import moe as moe_mod, transformer
+
+    cfg = reduced_config("qwen2-moe-a2.7b").with_overrides(
+        moe=MoEConfig(num_experts=4, top_k=2, expert_ff=32,
+                      num_shared_experts=0))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    p = jax.tree.map(lambda a: a[0], params["pattern"]["0"])["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 16, cfg.d_model)) * 0.3
+    y, aux = moe_mod.moe_forward(cfg, p, x)
+    assert y.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(y)))
+
+
+@SET
+@given(seed=st.integers(0, 1000), split=st.integers(1, 52))
+def test_cnn_split_execution_equivalence(seed, split):
+    """forward_range composition == forward, at any boundary."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.cnn_zoo import get_cnn_config
+    from repro.models import cnn
+
+    cfg = get_cnn_config("mobilenetv2")
+    split = min(split, len(cfg.layers) - 1)
+    params = cnn.init_params(cfg, jax.random.PRNGKey(seed % 3))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 32, 32, 3)) * 0.5
+    full = cnn.forward(cfg, params, x)
+    h = cnn.forward_range(cfg, params, x, 0, split)
+    out = cnn.forward_range(cfg, params, h, split, len(cfg.layers))
+    np.testing.assert_allclose(np.asarray(full), np.asarray(out),
+                               atol=1e-5, rtol=1e-5)

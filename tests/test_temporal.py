@@ -1,0 +1,101 @@
+"""Temporal (time-shifting) carbon scheduler — paper §V future work."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import EdgeCluster, PAPER_NODES
+from repro.core.scheduler import MODES
+from repro.core.temporal import (DeferrableTask, IntensityTrace, Placement,
+                                 TemporalScheduler,
+                                 carbon_savings_from_deferral,
+                                 synthetic_trace)
+
+
+def make_sched(weights=None):
+    c = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
+    c.profile(250.0)
+    traces = {
+        "node-high": synthetic_trace("coal-heavy", 620.0, solar_dip=0.1),
+        "node-medium": synthetic_trace("cn-average", 530.0, solar_dip=0.3),
+        "node-green": synthetic_trace("hydro-rich", 380.0, solar_dip=0.5),
+    }
+    return TemporalScheduler(c, traces, weights or MODES["green"]), traces
+
+
+def test_trace_interpolation():
+    tr = IntensityTrace("r", tuple(float(i) for i in range(24)))
+    assert tr.at(0.0) == 0.0
+    assert abs(tr.at(1.5) - 1.5) < 1e-9
+    assert abs(tr.at(23.5) - (23 * 0.5 + 0 * 0.5)) < 1e-9  # wraps
+    assert abs(tr.at(25.0) - 1.0) < 1e-9
+
+
+def test_synthetic_trace_duck_curve():
+    tr = synthetic_trace("r", 500.0)
+    vals = np.array(tr.values)
+    assert np.argmin(vals) in (12, 13, 14)        # midday solar dip
+    assert vals.max() <= 500.0 * 1.2
+    assert vals.min() >= 500.0 * 0.5
+
+
+def test_urgent_task_runs_now():
+    sched, _ = make_sched()
+    t = DeferrableTask(cpu=0.05, mem_mb=16, deadline_hours=0.0,
+                       duration_hours=0.1)
+    pl = sched.select(t, now_hour=18.0)
+    assert pl is not None
+    assert pl.deferred_hours == 0.0
+
+
+def test_deferral_targets_solar_dip():
+    """A task submitted in the evening with a 20h deadline should shift
+    into the next midday dip on the greenest trace."""
+    sched, traces = make_sched()
+    t = DeferrableTask(cpu=0.05, mem_mb=16, deadline_hours=20.0,
+                       duration_hours=0.5)
+    pl = sched.select(t, now_hour=18.0)
+    assert pl.node == "node-green"
+    start = pl.start_hour % 24
+    assert 10.0 <= start <= 16.0, pl            # midday window
+    # carbon at the chosen slot beats run-now on the same node
+    run_now = traces["node-green"].at(18.25)
+    chosen = traces["node-green"].at(pl.start_hour + 0.25)
+    assert chosen < run_now
+
+
+def test_deferral_saves_carbon():
+    sched, traces = make_sched()
+    c = sched.cluster
+    tasks = [DeferrableTask(cpu=0.05, mem_mb=16, deadline_hours=16.0,
+                            duration_hours=0.25) for _ in range(10)]
+    out = carbon_savings_from_deferral(c, traces, MODES["green"], tasks,
+                                       now_hour=19.0)
+    assert out["deferred_g"] <= out["run_now_g"] + 1e-12
+    assert out["savings_pct"] > 10.0            # evening -> midday shift
+
+
+@settings(max_examples=30, deadline=None)
+@given(now=st.floats(0.0, 23.9), deadline=st.floats(0.0, 30.0))
+def test_deadline_respected(now, deadline):
+    sched, _ = make_sched()
+    t = DeferrableTask(cpu=0.05, mem_mb=16, deadline_hours=deadline,
+                       duration_hours=0.2)
+    pl = sched.select(t, now_hour=now)
+    assert pl is not None
+    assert pl.deferred_hours <= max(deadline - 0.2, 0.0) + sched.slot_hours
+    assert pl.start_hour >= now - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(deadline=st.floats(1.0, 24.0))
+def test_deferral_never_worse_than_now(deadline):
+    """More slack can only reduce (or keep) expected carbon."""
+    sched, traces = make_sched()
+    urgent = DeferrableTask(cpu=0.05, mem_mb=16, deadline_hours=0.0,
+                            duration_hours=0.2)
+    slack = DeferrableTask(cpu=0.05, mem_mb=16, deadline_hours=deadline,
+                           duration_hours=0.2)
+    now = 19.0
+    p0 = sched.select(urgent, now)
+    p1 = sched.select(slack, now)
+    assert p1.expected_carbon_g <= p0.expected_carbon_g + 1e-12
