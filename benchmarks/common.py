@@ -19,8 +19,9 @@ from typing import Dict
 import numpy as np
 
 from repro.configs.cnn_zoo import get_cnn_config
+from repro.core.api import CarbonEdgeEngine
 from repro.core.cluster import EdgeCluster, PAPER_NODES
-from repro.core.scheduler import MODES, Task, Weights, run_workload
+from repro.core.scheduler import MODES, Task, Weights
 
 # model -> (base_latency_ms, host_power_w, distribution_overhead)
 CALIBRATION: Dict[str, tuple] = {
@@ -69,26 +70,27 @@ def run_monolithic(model: str) -> Dict:
     return {"totals": c.totals(), "distribution": c.distribution()}
 
 
+def run_weights(model: str, weights: Weights) -> Dict:
+    """Run the paper workload through the CarbonEdgeEngine (batched
+    vectorized scheduling — the production path, not the scalar oracle)."""
+    base, _, _ = CALIBRATION[model]
+    engine = CarbonEdgeEngine(fresh_cluster(model), weights=weights)
+    return engine.run(task=Task(base_latency_ms=base), iterations=ITERATIONS)
+
+
 def run_amp4ec(model: str) -> Dict:
     """Prior framework: NSA without the carbon term (w_C = 0)."""
-    base, _, _ = CALIBRATION[model]
-    c = fresh_cluster(model)
-    w = Weights(0.2632, 0.2632, 0.3158, 0.1578, 0.0)  # perf weights, w_C->0
-    return run_workload(c, Task(base_latency_ms=base), w, ITERATIONS)
+    return run_weights(model, Weights(0.2632, 0.2632, 0.3158, 0.1578, 0.0))
 
 
 def run_mode(model: str, mode: str) -> Dict:
-    base, _, _ = CALIBRATION[model]
-    c = fresh_cluster(model)
-    return run_workload(c, Task(base_latency_ms=base), MODES[mode], ITERATIONS)
+    return run_weights(model, MODES[mode])
 
 
 def run_sweep_point(model: str, w_c: float) -> Dict:
     from repro.core.scheduler import sweep_weights
 
-    base, _, _ = CALIBRATION[model]
-    c = fresh_cluster(model)
-    return run_workload(c, Task(base_latency_ms=base), sweep_weights(w_c), ITERATIONS)
+    return run_weights(model, sweep_weights(w_c))
 
 
 def reduction_vs_mono(model: str, r: Dict, mono: Dict) -> float:

@@ -1,7 +1,10 @@
 """Scheduling overhead (paper: 0.03 ms per task, <1% CPU).
 
-Measures (a) the Python NSA loop per task, (b) the vectorised numpy scorer
-at fleet scale, (c) the Pallas node-score kernel oracle comparison.
+Measures (a) the scalar-oracle NSA loop per task, (b) the default-policy
+single select (the GreenRouter.route() path), (c) the batched
+CarbonEdgeEngine selection (one vectorized call for the whole batch),
+(d) the vectorised numpy scorer at fleet scale. The Pallas kernel's
+oracle comparison lives in tests/test_kernels.py.
 """
 from __future__ import annotations
 
@@ -10,21 +13,44 @@ import time
 import numpy as np
 
 from benchmarks import common
-from repro.core.scheduler import MODES, Task, select_node, vector_scores
+from repro.core.policy import VectorizedPolicy, WeightedScoringPolicy
+from repro.core.scheduler import MODES, Task, vector_scores
 
 
 def run():
     c = common.fresh_cluster("mobilenetv2")
     task = Task(base_latency_ms=254.85)
     w = MODES["green"]
+    oracle = WeightedScoringPolicy()
     # warm
     for _ in range(10):
-        select_node(c, task, w)
+        oracle.select(c, task, w)
     n = 2000
     t0 = time.perf_counter()
     for _ in range(n):
-        select_node(c, task, w)
+        oracle.select(c, task, w)
     per_task_ms = (time.perf_counter() - t0) / n * 1e3
+
+    # single-task selection through the default (auto) policy — what
+    # GreenRouter.route() runs per request (falls through to the scalar
+    # loop on small fleets)
+    auto = VectorizedPolicy()
+    auto.select(c, task, w)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        auto.select(c, task, w)
+    route_select_ms = (time.perf_counter() - t0) / n * 1e3
+
+    # batched engine selection: B tasks x N nodes in one scorer call
+    policy = VectorizedPolicy(backend="numpy")
+    B = 256
+    batch = [task] * B
+    policy.select_batch(c, batch, w)
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        policy.select_batch(c, batch, w)
+    batch_per_task_ms = (time.perf_counter() - t0) / (reps * B) * 1e3
 
     # fleet-scale vectorised scorer
     rng = np.random.default_rng(0)
@@ -37,14 +63,20 @@ def run():
     fleet_us_per_100k = (time.perf_counter() - t0) / 10 * 1e6
     return {"per_task_ms": per_task_ms,
             "paper_per_task_ms": 0.03,
+            "route_select_ms": route_select_ms,
+            "engine_batch256_per_task_ms": batch_per_task_ms,
             "vector_100k_nodes_us": fleet_us_per_100k,
             "vector_ns_per_node": fleet_us_per_100k * 1e3 / 100_000}
 
 
 def main():
     out = run()
-    print(f"NSA per-task overhead: {out['per_task_ms']*1e3:.1f} us "
+    print(f"NSA per-task overhead (scalar oracle): {out['per_task_ms']*1e3:.1f} us "
           f"(paper: {out['paper_per_task_ms']*1e3:.0f} us)")
+    print(f"default-policy single select (route path): "
+          f"{out['route_select_ms']*1e3:.1f} us")
+    print(f"engine batched selection (B=256): "
+          f"{out['engine_batch256_per_task_ms']*1e3:.2f} us/task")
     print(f"vectorised scorer, 100k nodes: {out['vector_100k_nodes_us']:.0f} us "
           f"({out['vector_ns_per_node']:.1f} ns/node)")
     return out

@@ -1,6 +1,7 @@
-"""Quickstart: CarbonEdge's three mechanisms in ~60 lines.
+"""Quickstart: CarbonEdge's three mechanisms in ~70 lines.
 
-1. score nodes with the carbon-aware NSA (paper Eq. 3/4, Table I modes);
+1. schedule with the carbon-aware NSA through the CarbonEdgeEngine
+   (paper Eq. 3/4, Table I modes; DESIGN.md policy/provider API);
 2. partition a model with the green partitioner (paper Eq. 5);
 3. account energy/carbon with the Carbon Monitor (paper Eq. 1/2).
 
@@ -9,12 +10,13 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 
 from repro.configs.cnn_zoo import get_cnn_config
+from repro.core.api import CarbonEdgeEngine, StaticProvider
 from repro.core.carbon import CarbonMonitor
 from repro.core.cluster import EdgeCluster, PAPER_NODES
 from repro.core.partitioner import green_weights, partition_cnn
-from repro.core.scheduler import MODES, Task, score_table, select_node
+from repro.core.scheduler import MODES, Task, score_table
 
-# -- 1. carbon-aware scheduling --------------------------------------------
+# -- 1. carbon-aware scheduling (engine facade) ------------------------------
 cluster = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
 cluster.profile(base_latency_ms=254.85)           # seed per-node history
 task = Task(cpu=0.1, mem_mb=64, base_latency_ms=254.85)
@@ -22,8 +24,20 @@ task = Task(cpu=0.1, mem_mb=64, base_latency_ms=254.85)
 print("score components [S_R S_L S_P S_B S_C]:")
 for node, s in score_table(cluster, task).items():
     print(f"  {node:12s} {np.round(s, 3)}")
-for mode, w in MODES.items():
-    print(f"{mode:12s} -> {select_node(cluster, task, w)}")
+
+# grid intensity flows through a provider; scheduling through a policy —
+# the engine defaults to the batched vectorized/Pallas path.
+provider = StaticProvider.from_cluster(cluster)
+for mode in MODES:
+    engine = CarbonEdgeEngine(
+        EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0), mode=mode,
+        provider=provider)
+    engine.cluster.profile(254.85)
+    rep = engine.run(task=task, iterations=10)
+    top = max(rep["distribution"], key=rep["distribution"].get)
+    print(f"{mode:12s} -> {top}  "
+          f"({rep['totals']['carbon_g_per_inf']*1e3:.2f} mgCO2/inf, "
+          f"policy={rep['policy']})")
 
 # -- 2. green partitioning ---------------------------------------------------
 cfg = get_cnn_config("mobilenetv2")

@@ -1,0 +1,38 @@
+"""Compatibility shims for the installed jax version.
+
+``jax.shard_map`` was promoted to the top-level namespace only in newer
+jax releases; older versions (including the one baked into this container)
+ship it as ``jax.experimental.shard_map`` with a ``check_rep`` keyword where
+newer releases spell it ``check_vma``. Model, launch, and test code must
+import ``shard_map`` from here rather than from jax directly so the repo
+collects and runs on both generations.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6: top-level export, check_vma keyword
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # older jax: experimental namespace, check_rep keyword
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg translated to
+    whatever the installed jax spells it (``check_vma`` <-> ``check_rep``)."""
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, **kwargs)
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across the rename from ``TPUCompilerParams``
+    (older jax) to ``CompilerParams`` (newer jax)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -1,3 +1,29 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public API (DESIGN.md): providers + policies + engine, lazily re-exported
+# so `import repro.core` stays cheap.
+
+_API = {
+    "CarbonEdgeEngine": "repro.core.api",
+    "CarbonIntensityProvider": "repro.core.api",
+    "SchedulingPolicy": "repro.core.api",
+    "StaticProvider": "repro.core.api",
+    "TraceProvider": "repro.core.api",
+    "ForecastProvider": "repro.core.api",
+    "WeightedScoringPolicy": "repro.core.policy",
+    "VectorizedPolicy": "repro.core.policy",
+    "TemporalPolicy": "repro.core.policy",
+    "featurize": "repro.core.policy",
+}
+
+__all__ = sorted(_API)
+
+
+def __getattr__(name):
+    if name in _API:
+        import importlib
+
+        return getattr(importlib.import_module(_API[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

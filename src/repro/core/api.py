@@ -1,0 +1,297 @@
+"""CarbonEdge public API (DESIGN.md §1): providers, policies, engine.
+
+Three abstractions unify what the seed implemented four divergent times:
+
+- :class:`CarbonIntensityProvider` — the *only* way schedulers, routers and
+  the CarbonMonitor read grid intensity. :class:`StaticProvider` wraps the
+  per-node regional constants (paper §IV.A static scenario),
+  :class:`TraceProvider` wraps diurnal :class:`~repro.core.temporal.IntensityTrace`
+  signals, and :class:`ForecastProvider` composes over any base provider
+  (persistence lead + smoothing — an Electricity Maps-style forecast feed).
+
+- :class:`SchedulingPolicy` (protocol) — one scoring rule (paper Eq. 3/4,
+  Algorithm 1), three implementations in :mod:`repro.core.policy`:
+  ``WeightedScoringPolicy`` (scalar oracle), ``VectorizedPolicy`` (batched
+  numpy / Pallas ``node_score`` kernel — the default), and
+  ``TemporalPolicy`` (slot-grid deferral as a time-indexed feature column).
+
+- :class:`CarbonEdgeEngine` — the facade: ``submit``/``step``/``run``/
+  ``report``. ``step`` scores B pending tasks against N nodes in a single
+  scorer call (one Pallas kernel launch on TPU) instead of one Python loop
+  per task.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.carbon import CarbonMonitor
+from repro.core.cluster import EdgeCluster, TaskResult
+from repro.core.scheduler import MODES, Task, Weights
+
+
+# ---------------------------------------------------------------------------
+# Carbon intensity providers
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class CarbonIntensityProvider(Protocol):
+    """Single source of grid carbon intensity (gCO2/kWh) per node/region."""
+
+    def intensity(self, node: str, hour: float = 0.0) -> float:
+        ...
+
+
+@dataclass(frozen=True)
+class StaticProvider:
+    """Time-invariant regional intensities (paper §IV.A scenario)."""
+
+    table: Mapping[str, float]
+    default: Optional[float] = None
+
+    def intensity(self, node: str, hour: float = 0.0) -> float:
+        v = self.table.get(node, self.default)
+        if v is None:
+            raise KeyError(f"no carbon intensity registered for {node!r}")
+        return v
+
+    @classmethod
+    def from_cluster(cls, cluster: EdgeCluster) -> "StaticProvider":
+        return cls({name: st.spec.carbon_intensity
+                    for name, st in cluster.nodes.items()})
+
+    @classmethod
+    def from_pods(cls, pods: Sequence) -> "StaticProvider":
+        return cls({p.name: p.carbon_intensity for p in pods})
+
+
+@dataclass(frozen=True)
+class TraceProvider:
+    """Diurnal per-node traces (anything with ``.at(hour)``), falling back
+    to another provider for nodes without a trace."""
+
+    traces: Mapping[str, object]          # node -> IntensityTrace-like
+    fallback: Optional[CarbonIntensityProvider] = None
+
+    def intensity(self, node: str, hour: float = 0.0) -> float:
+        tr = self.traces.get(node)
+        if tr is not None:
+            return tr.at(hour)
+        if self.fallback is not None:
+            return self.fallback.intensity(node, hour)
+        raise KeyError(f"no trace or fallback intensity for {node!r}")
+
+
+@dataclass(frozen=True)
+class FallbackProvider:
+    """Try ``primary``, fall back to ``fallback`` for uncovered nodes —
+    e.g. a partial trace feed over the fleet's static regional values."""
+
+    primary: CarbonIntensityProvider
+    fallback: CarbonIntensityProvider
+
+    def intensity(self, node: str, hour: float = 0.0) -> float:
+        try:
+            return self.primary.intensity(node, hour)
+        except KeyError:
+            return self.fallback.intensity(node, hour)
+
+
+@dataclass(frozen=True)
+class ForecastProvider:
+    """Composable forecast view over any base provider.
+
+    ``lead_hours`` shifts the query time (persistence forecast for a
+    deferral decision made now about time t+lead); ``smoothing_hours``
+    averages the base signal over a centred window, modelling forecast
+    uncertainty flattening out short-lived dips.
+    """
+
+    base: CarbonIntensityProvider
+    lead_hours: float = 0.0
+    smoothing_hours: float = 0.0
+    samples: int = 5
+
+    def intensity(self, node: str, hour: float = 0.0) -> float:
+        t = hour + self.lead_hours
+        if self.smoothing_hours <= 0.0:
+            return self.base.intensity(node, t)
+        half = self.smoothing_hours / 2.0
+        ts = np.linspace(t - half, t + half, max(2, self.samples))
+        return float(np.mean([self.base.intensity(node, float(x)) for x in ts]))
+
+    def window(self, node: str, start_hour: float, end_hour: float,
+               step_hours: float = 0.5) -> np.ndarray:
+        """Forecast series over [start, end) — used for deferral planning."""
+        ts = np.arange(start_hour, end_hour, step_hours)
+        return np.array([self.intensity(node, float(t)) for t in ts])
+
+
+# ---------------------------------------------------------------------------
+# Scheduling policy protocol (implementations: repro/core/policy.py)
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """One scoring rule (Eq. 3/4), pluggable execution strategy."""
+
+    name: str
+
+    def select(self, cluster: EdgeCluster, task: Task, weights: Weights,
+               provider: Optional[CarbonIntensityProvider] = None,
+               now_hour: float = 0.0) -> Optional[str]:
+        ...
+
+    def select_batch(self, cluster: EdgeCluster, tasks: Sequence[Task],
+                     weights: Weights,
+                     provider: Optional[CarbonIntensityProvider] = None,
+                     now_hour: float = 0.0) -> List[Optional[str]]:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Engine facade
+# ---------------------------------------------------------------------------
+
+
+class NoFeasibleNodeError(RuntimeError):
+    """A task in the batch had no feasible placement.
+
+    ``executed`` holds the TaskResults of batch tasks that completed (and
+    were billed) before the failure; the failing task and the unexecuted
+    tail are back at the head of the engine queue.
+    """
+
+    def __init__(self, executed: List[TaskResult]):
+        super().__init__("no feasible node")
+        self.executed = executed
+
+
+class CarbonEdgeEngine:
+    """Batched carbon-aware scheduling engine (DESIGN.md §1.3).
+
+    Owns a cluster, a policy, an intensity provider and a CarbonMonitor.
+    ``step()`` drains up to ``batch_size`` pending tasks, scoring the whole
+    batch against all N nodes in one vectorised/Pallas call, then executes
+    placements and bills energy per region through the provider.
+    """
+
+    def __init__(self, cluster: EdgeCluster, *, mode: str = "green",
+                 weights: Optional[Weights] = None,
+                 policy: Optional[SchedulingPolicy] = None,
+                 provider: Optional[CarbonIntensityProvider] = None,
+                 monitor: Optional[CarbonMonitor] = None,
+                 batch_size: Optional[int] = None):
+        self.cluster = cluster
+        self.weights = weights if weights is not None else MODES[mode]
+        self.provider = provider or StaticProvider.from_cluster(cluster)
+        if policy is None:
+            from repro.core.policy import VectorizedPolicy
+            policy = VectorizedPolicy()
+        self.policy = policy
+        self.batch_size = batch_size
+        self.queue: List[Task] = []
+        self.monitor = monitor or CarbonMonitor(provider=self.provider)
+        if self.monitor.provider is None:
+            # Caller-supplied provider-less monitor: adopt the engine's
+            # provider so both ledgers (cluster execution and monitor
+            # billing) read the same, possibly time-varying, signal.
+            self.monitor.provider = self.provider
+        elif self.monitor.provider is not self.provider:
+            # A monitor wired to a DIFFERENT provider would silently bill
+            # from the wrong grid signal; that is only sound if every
+            # cluster region is pre-registered with a pinned intensity.
+            for name in cluster.nodes:
+                acc = self.monitor.regions.get(name)
+                if acc is None or not acc.pinned:
+                    raise ValueError(
+                        "caller-supplied monitor is wired to a different "
+                        f"CarbonIntensityProvider and region {name!r} is "
+                        "not pinned; share the engine's provider or pin "
+                        "every cluster region explicitly")
+        for name in cluster.nodes:
+            if name not in self.monitor.regions:
+                # same PUE as the cluster's execution ledger, so totals and
+                # per_region carbon agree
+                self.monitor.register_region(name, pue=cluster.pue)
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, task: Task) -> "CarbonEdgeEngine":
+        self.queue.append(task)
+        return self
+
+    def submit_many(self, tasks: Sequence[Task]) -> "CarbonEdgeEngine":
+        self.queue.extend(tasks)
+        return self
+
+    def step(self, now_hour: float = 0.0) -> List[TaskResult]:
+        """Place and execute one batch of pending tasks.
+
+        Selection for the whole batch is a single ``select_batch`` call —
+        with the default VectorizedPolicy that is one (B, N, 8) featurize
+        plus one kernel/scorer invocation, not B Python loops.
+        """
+        if not self.queue:
+            return []
+        b = self.batch_size or len(self.queue)
+        batch, self.queue = self.queue[:b], self.queue[b:]
+        results: List[TaskResult] = []
+        try:
+            choices = self.policy.select_batch(
+                self.cluster, batch, self.weights, provider=self.provider,
+                now_hour=now_hour)
+            for task, node in zip(batch, choices):
+                if node is None:
+                    # Already-executed results travel on the exception; the
+                    # infeasible task and the tail are requeued below.
+                    raise NoFeasibleNodeError(results)
+                st = self.cluster.nodes[node]
+                # Resolve every billing input BEFORE executing, so a
+                # provider/monitor lookup failure cannot leave a task
+                # executed in the cluster ledger yet requeued for a retry
+                # (which would double-execute it).
+                exec_intensity = self.provider.intensity(node, now_hour)
+                self.monitor.billing_intensity(node, now_hour)
+                st.running += 1
+                try:
+                    res = self.cluster.execute(
+                        node, task.base_latency_ms, distributed=True,
+                        intensity=exec_intensity)
+                finally:
+                    st.running -= 1
+                self.monitor.record_energy(node, res.energy_kwh,
+                                           hour=now_hour)
+                results.append(res)
+        except BaseException:
+            # On ANY failure (infeasible node, provider KeyError, execution
+            # error) put everything not successfully executed back at the
+            # head of the queue, so submitted work is never silently lost.
+            self.queue = list(batch[len(results):]) + self.queue
+            raise
+        return results
+
+    def run(self, tasks: Optional[Sequence[Task]] = None, *,
+            task: Optional[Task] = None, iterations: int = 1,
+            now_hour: float = 0.0) -> Dict:
+        """Submit ``tasks`` (or ``iterations`` copies of ``task``, default
+        one), drain the queue in batched steps, and return :meth:`report`."""
+        if tasks is not None:
+            self.submit_many(tasks)
+        if task is not None:
+            self.submit_many([task] * iterations)
+        while self.queue:
+            self.step(now_hour)
+        return self.report()
+
+    # -- reporting ---------------------------------------------------------
+    def report(self) -> Dict:
+        return {
+            "totals": self.cluster.totals(),
+            "distribution": self.cluster.distribution(),
+            "policy": self.policy.name,
+            "per_region": self.monitor.report(),
+        }

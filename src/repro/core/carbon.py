@@ -34,33 +34,69 @@ class RegionAccount:
     energy_kwh: float = 0.0
     carbon_g: float = 0.0
     tasks: int = 0
+    # True when the intensity was pinned explicitly at register_region time;
+    # pinned regions are never overridden by the monitor's provider.
+    pinned: bool = False
 
 
 class CarbonMonitor:
-    def __init__(self):
+    """Per-region energy/emissions ledger.
+
+    Grid intensity is read through a ``CarbonIntensityProvider``
+    (core/api.py) when one is given — time-varying billing via the ``hour``
+    argument — otherwise through the static value captured at
+    ``register_region`` time (equivalent to a StaticProvider snapshot).
+    """
+
+    def __init__(self, provider=None):
+        self.provider = provider
         self.regions: Dict[str, RegionAccount] = {}
         self._samples: List[EnergySample] = []
 
-    def register_region(self, name: str, intensity: float, pue: float = 1.0):
-        self.regions[name] = RegionAccount(intensity, pue)
+    def register_region(self, name: str, intensity: Optional[float] = None,
+                        pue: float = 1.0):
+        pinned = intensity is not None
+        if intensity is None:
+            if self.provider is None:
+                raise ValueError(
+                    f"register_region({name!r}) needs an intensity or a "
+                    "CarbonIntensityProvider")
+            intensity = self.provider.intensity(name)
+        self.regions[name] = RegionAccount(intensity, pue, pinned=pinned)
 
     # -- Eq. 1: discretised power integration ------------------------------
     def record_power_sample(self, region: str, dt_s: float, p_gpu_w: float = 0.0,
-                            p_cpu_w: float = 0.0, ram_gb: float = 0.0) -> float:
+                            p_cpu_w: float = 0.0, ram_gb: float = 0.0,
+                            hour: float = 0.0) -> float:
         p = p_gpu_w + p_cpu_w + ram_gb * RAM_W_PER_GB
         e_kwh = p * dt_s / 3.6e6
         self._samples.append(EnergySample(dt_s, p))
-        return self._bill(region, e_kwh)
+        return self._bill(region, e_kwh, hour)
 
     # -- workload-derived (roofline) ---------------------------------------
     def record_step(self, region: str, terms: RooflineTerms, chips: int,
-                    chip_power_w: float = energy_mod.CHIP_POWER_W) -> float:
+                    chip_power_w: float = energy_mod.CHIP_POWER_W,
+                    hour: float = 0.0) -> float:
         e_kwh = energy_mod.step_energy_kwh(terms, chips, chip_power_w)
-        return self._bill(region, e_kwh)
+        return self._bill(region, e_kwh, hour)
 
-    def _bill(self, region: str, e_kwh: float) -> float:
+    # -- pre-computed energy (engine path) ---------------------------------
+    def record_energy(self, region: str, e_kwh: float,
+                      hour: float = 0.0) -> float:
+        return self._bill(region, e_kwh, hour)
+
+    def billing_intensity(self, region: str, hour: float = 0.0) -> float:
+        """The intensity a `_bill` at ``hour`` would use — side-effect-free,
+        so callers can probe billing inputs before committing work."""
         acc = self.regions[region]
-        c = energy_mod.carbon_g(e_kwh, acc.intensity_g_per_kwh, acc.pue)
+        if self.provider is not None and not acc.pinned:
+            return self.provider.intensity(region, hour)
+        return acc.intensity_g_per_kwh
+
+    def _bill(self, region: str, e_kwh: float, hour: float = 0.0) -> float:
+        acc = self.regions[region]
+        c = energy_mod.carbon_g(e_kwh, self.billing_intensity(region, hour),
+                                acc.pue)
         acc.energy_kwh += e_kwh
         acc.carbon_g += c
         acc.tasks += 1
@@ -73,9 +109,18 @@ class CarbonMonitor:
     def total_energy_kwh(self) -> float:
         return sum(a.energy_kwh for a in self.regions.values())
 
+    def _effective_intensity(self, acc: RegionAccount) -> float:
+        """What the region was actually billed at: the energy-weighted mean
+        for provider-driven (possibly time-varying) regions with billed
+        energy, else the registration-time value."""
+        if self.provider is not None and not acc.pinned and acc.energy_kwh:
+            return acc.carbon_g / (acc.energy_kwh * acc.pue)
+        return acc.intensity_g_per_kwh
+
     def report(self) -> Dict[str, Dict[str, float]]:
         return {r: {"energy_kwh": a.energy_kwh, "carbon_g": a.carbon_g,
-                    "tasks": a.tasks, "intensity": a.intensity_g_per_kwh}
+                    "tasks": a.tasks,
+                    "intensity": self._effective_intensity(a)}
                 for r, a in self.regions.items()}
 
 

@@ -89,13 +89,18 @@ class EdgeCluster:
         return base_latency_ms * (1.0 + self.distribution_overhead)
 
     def execute(self, node_name: str, base_latency_ms: float,
-                distributed: bool = True) -> TaskResult:
+                distributed: bool = True,
+                intensity: Optional[float] = None) -> TaskResult:
         st = self.nodes[node_name]
         lat = self.measured_latency_ms(base_latency_ms, distributed)
         # Serial run: full host power billed to the executing node's region
-        # (CodeCarbon machine-mode accounting).
+        # (CodeCarbon machine-mode accounting). ``intensity`` lets a
+        # CarbonIntensityProvider (core/api.py) supply the grid signal at
+        # execution time; None keeps the static regional value.
+        if intensity is None:
+            intensity = st.spec.carbon_intensity
         e_kwh = self.host_power_w * (lat / 1000.0) / 3.6e6
-        c_g = energy_mod.carbon_g(e_kwh, st.spec.carbon_intensity, self.pue)
+        c_g = energy_mod.carbon_g(e_kwh, intensity, self.pue)
         st.completed += 1
         st.total_time_ms += lat
         st.energy_kwh += e_kwh

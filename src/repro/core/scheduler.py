@@ -4,14 +4,18 @@ S_total = w_R*S_R + w_L*S_L + w_P*S_P + w_B*S_B + w_C*S_C         (Eq. 3)
 S_C     = 1 / (1 + I_carbon * E_est),  E_est = P*T_avg/3.6e6      (Eq. 4)
 
 Three operational modes (Table I) plus a continuous weight-sweep
-interpolation used by Fig. 3. A vectorised jnp scorer mirrors the Python
-loop for fleet-scale scheduling; its Pallas TPU kernel lives in
-kernels/node_score.py with this module as oracle.
+interpolation used by Fig. 3.
+
+The scheduling *engines* live in core/policy.py + core/api.py (DESIGN.md):
+this module keeps the Eq. 3/4 component math (``scores``/``vector_scores``,
+which back the scalar oracle and the vectorized/Pallas policies) plus thin
+deprecation shims for the seed's entry points (``select_node``,
+``run_workload``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -40,9 +44,11 @@ MODES: Dict[str, Weights] = {
 
 def sweep_weights(w_c: float) -> Weights:
     """Fig. 3 interpolation: carbon weight w_c, the rest scaled from the
-    Performance-mode ratios (which sum to 0.95)."""
+    Performance-mode ratios (normalised by that mode's non-carbon sum, so
+    w_c == MODES["performance"].w_c reproduces the mode exactly)."""
     base = MODES["performance"]
-    s = (1.0 - w_c) / 0.95
+    non_carbon = base.w_r + base.w_l + base.w_p + base.w_b
+    s = (1.0 - w_c) / non_carbon
     return Weights(base.w_r * s, base.w_l * s, base.w_p * s, base.w_b * s, w_c)
 
 
@@ -66,13 +72,18 @@ def resource_score(st: NodeState, task: Task) -> float:
     return 0.5 * s_cpu + 0.5 * s_mem
 
 
-def scores(st: NodeState, task: Task, host_power_w: float) -> np.ndarray:
+def scores(st: NodeState, task: Task, host_power_w: float,
+           intensity: Optional[float] = None) -> np.ndarray:
+    """Eq. 3 components. ``intensity`` comes from a CarbonIntensityProvider
+    (core/api.py); None falls back to the node's static regional value."""
+    if intensity is None:
+        intensity = st.spec.carbon_intensity
     s_r = resource_score(st, task)
     s_l = 1.0 - st.load
     s_p = 1.0 / (1.0 + st.avg_time_ms / 1000.0)
     s_b = 1.0 / (1.0 + st.running * 2.0)
     e_est = st.power_w(host_power_w) * st.avg_time_ms / 3.6e6  # Eq. 4 units
-    s_c = 1.0 / (1.0 + st.spec.carbon_intensity * e_est)
+    s_c = 1.0 / (1.0 + intensity * e_est)
     return np.array([s_r, s_l, s_p, s_b, s_c])
 
 
@@ -83,17 +94,16 @@ def has_sufficient_resources(st: NodeState, task: Task) -> bool:
 
 def select_node(cluster: EdgeCluster, task: Task, weights: Weights,
                 latency_threshold_ms: float = 5000.0) -> Optional[str]:
-    """Algorithm 1: Carbon-Aware Node Selection."""
-    best_score, best = 0.0, None
-    for name, st in cluster.nodes.items():
-        if st.load > 0.8 or st.avg_time_ms > latency_threshold_ms:
-            continue
-        if not has_sufficient_resources(st, task):
-            continue
-        s = float(weights.as_array() @ scores(st, task, cluster.host_power_w))
-        if s > best_score:
-            best_score, best = s, name
-    return best
+    """Algorithm 1: Carbon-Aware Node Selection.
+
+    Deprecated shim — the loop now lives in
+    :class:`repro.core.policy.WeightedScoringPolicy` (the parity oracle);
+    batched scheduling goes through :class:`repro.core.api.CarbonEdgeEngine`.
+    """
+    from repro.core.policy import WeightedScoringPolicy
+
+    return WeightedScoringPolicy(latency_threshold_ms).select(
+        cluster, task, weights)
 
 
 def score_table(cluster: EdgeCluster, task: Task) -> Dict[str, np.ndarray]:
@@ -133,14 +143,16 @@ def vector_select(features: np.ndarray, weights: np.ndarray,
 
 
 def run_workload(cluster: EdgeCluster, task: Task, weights: Weights,
-                 iterations: int = 50) -> Dict:
-    """Serial 50-inference workload (paper §IV.A.4)."""
-    for _ in range(iterations):
-        node = select_node(cluster, task, weights)
-        if node is None:
-            raise RuntimeError("no feasible node")
-        st = cluster.nodes[node]
-        st.running += 1
-        cluster.execute(node, task.base_latency_ms, distributed=True)
-        st.running -= 1
-    return {"totals": cluster.totals(), "distribution": cluster.distribution()}
+                 iterations: int = 50, policy=None) -> Dict:
+    """50-inference workload (paper §IV.A.4).
+
+    Deprecated shim — delegates to :class:`repro.core.api.CarbonEdgeEngine`,
+    whose default VectorizedPolicy scores the whole batch against all nodes
+    in one call (the Pallas kernel on TPU). Pass
+    ``policy=WeightedScoringPolicy()`` to force the scalar oracle.
+    """
+    from repro.core.api import CarbonEdgeEngine
+
+    engine = CarbonEdgeEngine(cluster, weights=weights, policy=policy)
+    rep = engine.run(task=task, iterations=iterations)
+    return {"totals": rep["totals"], "distribution": rep["distribution"]}

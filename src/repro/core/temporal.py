@@ -14,17 +14,24 @@ Adds to the static-scenario core:
 
 This keeps the paper's Eq. 4 scoring intact — S_C simply becomes
 time-indexed — so the weight semantics of Table I are unchanged.
+
+The slot-grid search itself lives in
+:class:`repro.core.policy.TemporalPolicy` (the Eq. 3 math is *not*
+duplicated here); intensity is read through a
+:class:`repro.core.api.TraceProvider`. This module keeps the trace types,
+the deferrable-task model, and the thin scheduler wrapper.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.api import StaticProvider, TraceProvider
 from repro.core.cluster import EdgeCluster
-from repro.core.scheduler import Task, Weights, scores, has_sufficient_resources
+from repro.core.policy import Placement, TemporalPolicy
+from repro.core.scheduler import Task, Weights
 
 
 @dataclass(frozen=True)
@@ -66,62 +73,36 @@ class DeferrableTask(Task):
     duration_hours: float = 0.1
 
 
-@dataclass
-class Placement:
-    node: str
-    start_hour: float
-    expected_carbon_g: float
-    deferred_hours: float
-
-
 class TemporalScheduler:
-    """Space-time extension of the NSA (Algorithm 1 over a slot grid)."""
+    """Space-time extension of the NSA (Algorithm 1 over a slot grid).
+
+    Thin wrapper: the grid search is
+    :meth:`repro.core.policy.TemporalPolicy.place`; the intensity signal is
+    a :class:`TraceProvider` over ``traces`` with the cluster's static
+    regional values as fallback.
+    """
 
     def __init__(self, cluster: EdgeCluster, traces: Dict[str, IntensityTrace],
-                 weights: Weights, slot_hours: float = 0.5):
+                 weights: Weights, slot_hours: Optional[float] = None,
+                 policy: Optional[TemporalPolicy] = None, provider=None):
+        if (policy is not None and slot_hours is not None
+                and slot_hours != policy.slot_hours):
+            raise ValueError(
+                f"conflicting slot_hours: {slot_hours} vs the supplied "
+                f"policy's {policy.slot_hours}")
         self.cluster = cluster
         self.traces = traces
         self.weights = weights
-        self.slot_hours = slot_hours
-
-    def _intensity(self, node: str, hour: float) -> float:
-        tr = self.traces.get(node)
-        if tr is None:
-            return self.cluster.nodes[node].spec.carbon_intensity
-        return tr.at(hour)
-
-    def _task_energy_kwh(self, node: str, task: DeferrableTask) -> float:
-        st = self.cluster.nodes[node]
-        p = st.power_w(self.cluster.host_power_w)
-        return p * task.duration_hours / 1000.0
+        self.provider = provider or TraceProvider(
+            traces, fallback=StaticProvider.from_cluster(cluster))
+        self.policy = policy or TemporalPolicy(
+            slot_hours=0.5 if slot_hours is None else slot_hours)
+        # single source of truth: the policy's grid granularity
+        self.slot_hours = self.policy.slot_hours
 
     def select(self, task: DeferrableTask, now_hour: float = 0.0) -> Optional[Placement]:
-        horizon = max(task.deadline_hours - task.duration_hours, 0.0)
-        n_slots = max(1, int(horizon / self.slot_hours) + 1)
-        best: Optional[Placement] = None
-        for name, st in self.cluster.nodes.items():
-            if st.load > 0.8 or not has_sufficient_resources(st, task):
-                continue
-            e = self._task_energy_kwh(name, task)
-            base = scores(st, task, self.cluster.host_power_w)
-            for s in range(n_slots):
-                t0 = now_hour + s * self.slot_hours
-                intensity = self._intensity(name, t0 + task.duration_hours / 2)
-                carbon = e * intensity
-                # time-indexed S_C (Eq. 4 with the slot's intensity)
-                s_c = 1.0 / (1.0 + intensity * e * 1e3)
-                comp = base.copy()
-                comp[4] = s_c
-                score = float(self.weights.as_array() @ comp)
-                # small deferral penalty keeps ties at "run now"
-                score -= 1e-6 * s
-                if best is None or carbon < best.expected_carbon_g - 1e-12 or (
-                        abs(carbon - best.expected_carbon_g) < 1e-12
-                        and score > 0):
-                    cand = Placement(name, t0, carbon, s * self.slot_hours)
-                    if best is None or carbon < best.expected_carbon_g:
-                        best = cand
-        return best
+        return self.policy.place(self.cluster, task, self.weights,
+                                 self.provider, now_hour)
 
     def run(self, tasks: Sequence[DeferrableTask], now_hour: float = 0.0
             ) -> Tuple[List[Placement], float]:

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _kernel(x_ref, b_ref, c_ref, cum_ref, state_ref, y_ref, newstate_ref):
     x = x_ref[0, 0].astype(jnp.float32)            # (L, P)
@@ -76,7 +78,7 @@ def mamba2_chunk(xdt, Bh, Ch, cum, state, *, interpret: bool = False):
             jax.ShapeDtypeStruct((B, H, L, P), xdt.dtype),
             jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xdt, Bh, Ch, cum4, state)

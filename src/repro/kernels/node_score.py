@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -59,7 +61,7 @@ def node_scores(features, weights, *, bn: int = 1024, interpret: bool = False):
         ],
         out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(features, w2)
@@ -70,3 +72,30 @@ def select_best(features, weights, *, interpret: bool = False) -> jnp.ndarray:
     """Fused scoring + argmax; returns best node index (int32)."""
     s = node_scores(features, weights, interpret=interpret)
     return jnp.argmax(s).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Batched variant: B pending tasks x N nodes in ONE kernel launch
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def node_scores_batched(features, weights, *, bn: int = 1024,
+                        interpret: bool = False):
+    """features: (B, N, 8) f32; weights: (8,) f32 -> (B, N) scores.
+
+    The CarbonEdgeEngine hot path: scoring is row-wise with shared weights,
+    so B tasks x N nodes flattens to one (B*N, 8) pass through the single
+    kernel above — still exactly one pallas_call (and one HBM read of the
+    feature tensor) per batch, with no duplicated Eq. 3 math.
+    """
+    B, N, _ = features.shape
+    flat = node_scores(features.reshape(B * N, 8), weights, bn=bn,
+                       interpret=interpret)
+    return flat.reshape(B, N)
+
+
+def select_best_batched(features, weights, *, interpret: bool = False):
+    """Fused batched scoring + per-task argmax -> (B,) int32 node indices."""
+    s = node_scores_batched(features, weights, interpret=interpret)
+    return jnp.argmax(s, axis=1).astype(jnp.int32)

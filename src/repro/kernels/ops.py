@@ -53,8 +53,18 @@ def select_best_node(features, weights):
     return _ns.select_best(features, weights, interpret=_interpret())
 
 
+def node_scores_batched(features, weights):
+    """(B, N, 8) x (8,) -> (B, N): the engine's one-launch batched scorer."""
+    return _ns.node_scores_batched(features, weights, interpret=_interpret())
+
+
+def select_best_node_batched(features, weights):
+    return _ns.select_best_batched(features, weights, interpret=_interpret())
+
+
 # Re-export oracles for tests/benchmarks.
 flash_attention_ref = ref.flash_attention_ref
 decode_attention_ref = ref.decode_attention_ref
 mamba2_chunk_ref = ref.mamba2_chunk_ref
 node_scores_ref = ref.node_scores_ref
+node_scores_batched_ref = ref.node_scores_batched_ref

@@ -87,3 +87,8 @@ def node_scores_ref(features, weights):
     total = (weights[0] * s_r + weights[1] * s_l + weights[2] * s_p
              + weights[3] * s_b + weights[4] * s_c)
     return jnp.where(f[:, 6] > 0.5, total, NEG_INF)
+
+
+def node_scores_batched_ref(features, weights):
+    """features: (B, N, 8); weights: (8,) -> (B, N)."""
+    return jax.vmap(node_scores_ref, in_axes=(0, None))(features, weights)

@@ -29,6 +29,10 @@ def main(argv=None):
     ap.add_argument("--arch", choices=list_archs(), default="qwen3-1.7b")
     ap.add_argument("--mode", choices=["performance", "balanced", "green"],
                     default="green")
+    ap.add_argument("--policy", choices=["vectorized", "scalar"],
+                    default="vectorized",
+                    help="scheduling policy: the batched vectorized/Pallas "
+                         "path (default) or the scalar Algorithm-1 oracle")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -38,7 +42,10 @@ def main(argv=None):
 
     cfg = get_config(args.arch) if args.full_config else reduced_config(args.arch)
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
-    router = GreenRouter(DEFAULT_PODS, mode=args.mode)
+    from repro.core.policy import VectorizedPolicy, WeightedScoringPolicy
+    policy = (WeightedScoringPolicy() if args.policy == "scalar"
+              else VectorizedPolicy())
+    router = GreenRouter(DEFAULT_PODS, mode=args.mode, policy=policy)
 
     # Seed each pod's history with its compiled-step roofline time (identical
     # model on each pod here; heterogeneous pods would differ).

@@ -29,8 +29,9 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models.common import ParamSpec, activation

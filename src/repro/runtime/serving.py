@@ -68,8 +68,13 @@ class ServingEngine:
         hbm = costmodel.step_hbm_bytes(self.cfg, seq, batch, kind)
         return energy.roofline(flops, hbm, 0.0, chips=chips)
 
-    def run_batch(self) -> List[Completion]:
-        """Serve up to batch_size queued requests as one batch."""
+    def run_batch(self, now_hour: float = 0.0) -> List[Completion]:
+        """Serve up to batch_size queued requests as one batch.
+
+        ``now_hour`` flows into routing and billing so a time-varying
+        intensity provider on the router (TraceProvider/ForecastProvider)
+        is sampled at the request time, not at hour 0.
+        """
         if not self.queue:
             return []
         batch = self.queue[: self.batch_size]
@@ -79,18 +84,21 @@ class ServingEngine:
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(batch):
             toks[i, S - len(r.prompt):] = r.prompt  # left-pad
-        pod = self.router.route()
+        pod = self.router.route(now_hour=now_hour)
         chips = self.router.pods[pod].chips
         t0 = time.perf_counter()
         cache, logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
-        carbon = self.router.commit(pod, self._step_terms("prefill", S, B, chips))
+        carbon = self.router.commit(pod, self._step_terms("prefill", S, B, chips),
+                                    hour=now_hour)
         max_new = max(r.max_new_tokens for r in batch)
         out = np.zeros((B, max_new), np.int32)
         tok = steps.greedy_sample(logits)[:, None]
         for t in range(max_new):
             out[:, t] = np.asarray(tok[:, 0])
             logits, cache = self._decode(self.params, cache, tok, jnp.int32(S + t))
-            carbon += self.router.commit(pod, self._step_terms("decode", S + t + 1, B, chips))
+            carbon += self.router.commit(
+                pod, self._step_terms("decode", S + t + 1, B, chips),
+                hour=now_hour)
             tok = steps.greedy_sample(logits)[:, None]
         dt = time.perf_counter() - t0
         comps = []
@@ -101,10 +109,10 @@ class ServingEngine:
             self.completions.append(c)
         return comps
 
-    def run_all(self) -> List[Completion]:
+    def run_all(self, now_hour: float = 0.0) -> List[Completion]:
         done = []
         while self.queue:
-            done.extend(self.run_batch())
+            done.extend(self.run_batch(now_hour))
         return done
 
     def report(self) -> Dict:
@@ -113,4 +121,5 @@ class ServingEngine:
             "carbon_g_total": self.router.monitor.total_carbon_g(),
             "energy_kwh_total": self.router.monitor.total_energy_kwh(),
             "per_region": self.router.monitor.report(),
+            "policy": self.router.policy.name,
         }

@@ -132,6 +132,34 @@ def test_node_scores_matches_scheduler():
                                atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("B,n", [(4, 1024), (3, 100), (1, 7)])
+def test_node_scores_batched(B, n):
+    """One-launch batched scorer == vmap'd reference == per-row single."""
+    rng = np.random.default_rng(3)
+    f = np.abs(rng.standard_normal((B, n, 8))).astype(np.float32)
+    f[:, :, 6] = (f[:, :, 6] > 0.4).astype(np.float32)
+    w = np.array([0.2, 0.2, 0.15, 0.15, 0.3, 0, 0, 0], np.float32)
+    out = ops.node_scores_batched(jnp.asarray(f), jnp.asarray(w))
+    ref = ops.node_scores_batched_ref(jnp.asarray(f), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
+    for b in range(B):
+        row = ops.node_scores(jnp.asarray(f[b]), jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(row),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_select_best_node_batched():
+    rng = np.random.default_rng(4)
+    f = np.abs(rng.standard_normal((5, 300, 8))).astype(np.float32)
+    f[:, :, 6] = 1.0
+    w = np.array([0.2, 0.2, 0.15, 0.15, 0.3, 0, 0, 0], np.float32)
+    best = np.asarray(ops.select_best_node_batched(jnp.asarray(f), jnp.asarray(w)))
+    ref = np.argmax(np.asarray(ops.node_scores_batched_ref(
+        jnp.asarray(f), jnp.asarray(w))), axis=1)
+    np.testing.assert_array_equal(best, ref)
+
+
 def test_select_best_node():
     rng = np.random.default_rng(2)
     f = np.abs(rng.standard_normal((1000, 8))).astype(np.float32)

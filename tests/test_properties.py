@@ -1,6 +1,13 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+hypothesis is an optional extra (``pip install -e .[test]``, see
+pyproject.toml); on minimal hosts this module skips cleanly.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cluster import EdgeCluster, NodeSpec
 from repro.core.partitioner import green_weights, partition_costs
