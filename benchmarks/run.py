@@ -9,7 +9,7 @@ from __future__ import annotations
 
 def main() -> None:
     from benchmarks import (fig2_tradeoff, fig3_weight_sweep, overhead,
-                            roofline, table2_carbon_footprint,
+                            roofline, sim_serving, table2_carbon_footprint,
                             table4_multi_model, table5_node_distribution,
                             temporal_shifting)
 
@@ -47,6 +47,19 @@ def main() -> None:
     ts = temporal_shifting.run(deadlines=(16.0,))
     rows.append(("beyond_paper_temporal_shifting", 0.0,
                  f"savings_pct={ts[0]['savings_pct']:.1f}"))
+
+    sim = sim_serving.run()
+    acc = next(r for r in sim["deferral"] if r["bias_h"] == 0.0)
+    worst = sim["deferral"][-1]
+    rows.append(("sim_serving_deferral_accurate", 0.0,
+                 f"savings_pct={acc['savings_vs_run_now_pct']:.1f}"))
+    rows.append(("sim_serving_forecast_regret", 0.0,
+                 f"regret_g_at_{worst['bias_h']:g}h={worst['regret_g']:.4f}"))
+    loaded = max((r for r in sim["rate_mode"] if r["mode"] == "green"),
+                 key=lambda r: r["rate_per_hour"])
+    rows.append(("sim_serving_green_wait_p95",
+                 loaded["wait_s_p95"] * 1e6,
+                 f"slo_violation_rate={loaded['slo_violation_rate']:.3f}"))
 
     for r in roofline.load():
         rows.append((f"roofline_{r['arch']}_{r['shape']}",

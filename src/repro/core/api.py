@@ -22,6 +22,7 @@ Three abstractions unify what the seed implemented four divergent times:
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, Optional, Protocol, Sequence, runtime_checkable
 
@@ -228,16 +229,26 @@ class CarbonEdgeEngine:
         self.queue.extend(tasks)
         return self
 
-    def step(self, now_hour: float = 0.0) -> List[TaskResult]:
+    def peek(self, limit: Optional[int] = None) -> List[Task]:
+        """The tasks the next :meth:`step` would drain, without dequeuing —
+        a public inspection hook for drivers and operators (the bundled
+        sim driver mirrors the queue itself and steps with ``limit``)."""
+        b = limit if limit is not None else (self.batch_size or len(self.queue))
+        return list(self.queue[:b])
+
+    def step(self, now_hour: float = 0.0,
+             limit: Optional[int] = None) -> List[TaskResult]:
         """Place and execute one batch of pending tasks.
 
         Selection for the whole batch is a single ``select_batch`` call —
         with the default VectorizedPolicy that is one (B, N, 8) featurize
-        plus one kernel/scorer invocation, not B Python loops.
+        plus one kernel/scorer invocation, not B Python loops. ``limit``
+        overrides ``batch_size`` for this call (partial drain — the sim
+        driver steps exactly the tasks whose arrival events have fired).
         """
         if not self.queue:
             return []
-        b = self.batch_size or len(self.queue)
+        b = limit if limit is not None else (self.batch_size or len(self.queue))
         batch, self.queue = self.queue[:b], self.queue[b:]
         results: List[TaskResult] = []
         try:
@@ -278,7 +289,22 @@ class CarbonEdgeEngine:
             task: Optional[Task] = None, iterations: int = 1,
             now_hour: float = 0.0) -> Dict:
         """Submit ``tasks`` (or ``iterations`` copies of ``task``, default
-        one), drain the queue in batched steps, and return :meth:`report`."""
+        one), drain the queue in batched steps, and return :meth:`report`.
+
+        .. deprecated:: the whole queue is drained at a single frozen
+           ``now_hour``, which silently mis-bills time-varying providers
+           (every batch reads the grid at the submission instant, however
+           long the drain takes). With a non-static provider prefer
+           :meth:`run_until` (minimal time-advancing drain) or the full
+           event-driven :class:`repro.sim.AsyncEngineDriver`; this shim
+           stays exact for the static paper scenarios.
+        """
+        if not isinstance(self.provider, StaticProvider):
+            warnings.warn(
+                "CarbonEdgeEngine.run drains the queue at one frozen "
+                "now_hour; with a time-varying CarbonIntensityProvider use "
+                "run_until() or repro.sim.AsyncEngineDriver so billing "
+                "tracks simulated time", DeprecationWarning, stacklevel=2)
         if tasks is not None:
             self.submit_many(tasks)
         if task is not None:
@@ -286,6 +312,32 @@ class CarbonEdgeEngine:
         while self.queue:
             self.step(now_hour)
         return self.report()
+
+    def run_until(self, end_hour: float, *, start_hour: float = 0.0,
+                  limit: Optional[int] = None) -> Dict:
+        """Drain the queue in batched steps while *advancing simulated
+        time*: each batch is billed at the hour the previous batches'
+        measured service time has accumulated to (the cluster is a serial
+        executor, so a batch of total latency L ms advances the clock by
+        L / 3.6e6 hours). Stops when the queue is empty or the clock
+        passes ``end_hour`` (the remainder stays queued). Returns
+        :meth:`report` plus the final clock under ``"end_hour"``.
+
+        This is the minimal time-advancing replacement for :meth:`run`;
+        arrival dynamics, deferral and queueing metrics live in the full
+        event-driven :class:`repro.sim.AsyncEngineDriver`.
+        """
+        now = start_hour
+        while self.queue and now < end_hour:
+            results = self.step(now, limit=limit)
+            if not results:
+                # zero-size limit or a step that drained nothing: no
+                # progress is possible, bail instead of spinning forever
+                break
+            now += sum(r.latency_ms for r in results) / 3.6e6
+        rep = self.report()
+        rep["end_hour"] = now
+        return rep
 
     # -- reporting ---------------------------------------------------------
     def report(self) -> Dict:

@@ -33,8 +33,8 @@ import numpy as np
 
 from repro.core.api import (CarbonIntensityProvider, StaticProvider)
 from repro.core.cluster import EdgeCluster
-from repro.core.scheduler import (Task, Weights, has_sufficient_resources,
-                                  scores, vector_scores)
+from repro.core.scheduler import (LOAD_THRESHOLD, Task, Weights,
+                                  node_feasible, scores, vector_scores)
 
 # Scores below this are "invalid" sentinels (the Pallas kernel emits -1e30,
 # the numpy path -inf).
@@ -69,7 +69,8 @@ def featurize(cluster: EdgeCluster, tasks: Sequence[Task],
         st = cluster.nodes[name]
         free_cpu = st.spec.cpu * (1.0 - st.load)
         free_mem = st.spec.mem_mb - st.mem_used_mb
-        node_ok = st.load <= 0.8 and st.avg_time_ms <= latency_threshold_ms
+        node_ok = (st.load <= LOAD_THRESHOLD
+                   and st.avg_time_ms <= latency_threshold_ms)
         feasible = node_ok & (free_cpu >= task_cpu) & (free_mem >= task_mem)
         # Query the provider only when some task can actually use the node
         # (like the scalar oracle, which filters before reading intensity):
@@ -122,9 +123,9 @@ class WeightedScoringPolicy:
                now_hour: float = 0.0) -> Optional[str]:
         best_score, best = 0.0, None
         for name, st in cluster.nodes.items():
-            if st.load > 0.8 or st.avg_time_ms > self.latency_threshold_ms:
+            if st.avg_time_ms > self.latency_threshold_ms:
                 continue
-            if not has_sufficient_resources(st, task):
+            if not node_feasible(st, task):
                 continue
             comp = scores(st, task, cluster.host_power_w,
                           intensity=provider.intensity(name, now_hour)

@@ -92,6 +92,17 @@ def has_sufficient_resources(st: NodeState, task: Task) -> bool:
             and st.spec.mem_mb - st.mem_used_mb >= task.mem_mb)
 
 
+# Algorithm 1 line 3 load cut-off — the single definition every scheduling
+# path (scalar oracle, featurize, deferral planning) filters against.
+LOAD_THRESHOLD = 0.8
+
+
+def node_feasible(st: NodeState, task: Task) -> bool:
+    """Algorithm 1 lines 3-5 sans the latency filter (which is a policy
+    parameter): overload cut-off plus resource sufficiency."""
+    return st.load <= LOAD_THRESHOLD and has_sufficient_resources(st, task)
+
+
 def select_node(cluster: EdgeCluster, task: Task, weights: Weights,
                 latency_threshold_ms: float = 5000.0) -> Optional[str]:
     """Algorithm 1: Carbon-Aware Node Selection.

@@ -31,7 +31,7 @@ import numpy as np
 from repro.core.api import StaticProvider, TraceProvider
 from repro.core.cluster import EdgeCluster
 from repro.core.policy import Placement, TemporalPolicy
-from repro.core.scheduler import Task, Weights
+from repro.core.scheduler import Task, Weights, node_feasible
 
 
 @dataclass(frozen=True)
@@ -71,6 +71,52 @@ def synthetic_trace(region: str, base: float, solar_dip: float = 0.35,
 class DeferrableTask(Task):
     deadline_hours: float = 0.0            # 0 => not deferrable
     duration_hours: float = 0.1
+
+
+def plan_wake(provider, cluster: EdgeCluster, task, now_hour: float,
+              slot_hours: float = 0.5) -> float:
+    """When should a deferrable task wake to minimise expected carbon?
+
+    This is the *driver-routed* deferral path (DESIGN.md §2): instead of
+    the eager slot scan executing a placement immediately
+    (:meth:`TemporalPolicy.place`), the sim driver calls ``plan_wake`` to
+    pick a wake hour, parks the task on a ``DEFER_WAKE`` event, and lets
+    the engine's policy choose the node *at wake time* against the
+    then-current cluster state — so capacity freed (or consumed) between
+    submission and wake is seen, which the eager scan cannot do.
+
+    The wake slot minimises the provider's intensity over the feasible
+    nodes' forecast series within ``[now, now + deadline - duration]``
+    (a :class:`~repro.core.api.ForecastProvider` answers through
+    ``window`` — CarbonCP-style acting-under-forecast; any other provider
+    is sampled per slot). Ties prefer the earliest slot (run now). A task
+    without deadline slack, or with no feasible node, wakes immediately.
+    """
+    deadline = getattr(task, "deadline_hours", 0.0)
+    duration = getattr(task, "duration_hours", 0.0)
+    horizon = max(deadline - duration, 0.0)
+    if horizon <= 0.0:
+        return now_hour
+    n_slots = max(1, int(horizon / slot_hours) + 1)
+    # half-slot pad so float fuzz in arange never drops/adds a slot
+    end = now_hour + (n_slots - 0.5) * slot_hours
+    best_slot, best_val = 0, np.inf
+    for name, st in cluster.nodes.items():
+        if not node_feasible(st, task):
+            continue
+        if hasattr(provider, "window"):
+            series = np.asarray(provider.window(name, now_hour, end,
+                                                slot_hours))[:n_slots]
+        else:
+            series = np.array([provider.intensity(name, now_hour + k * slot_hours)
+                               for k in range(n_slots)])
+        if series.size == 0:
+            continue
+        k = int(np.argmin(series))
+        # strict < keeps the earliest slot (and first node) on exact ties
+        if series[k] < best_val:
+            best_val, best_slot = float(series[k]), k
+    return now_hour + best_slot * slot_hours
 
 
 class TemporalScheduler:

@@ -28,7 +28,8 @@ class Request:
     uid: int
     prompt: np.ndarray           # (S,) int32
     max_new_tokens: int = 16
-    submitted_s: float = 0.0
+    # None = not yet submitted; 0.0 is a valid (virtual) submission time
+    submitted_s: Optional[float] = None
 
 
 @dataclass
@@ -36,8 +37,15 @@ class Completion:
     uid: int
     tokens: List[int]
     pod: str
-    latency_s: float
+    wait_s: float                # queue time: submit -> batch start
+    service_s: float             # batch start -> this request's last token
     carbon_g: float
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end: queue wait plus service (wait used to be dropped and
+        every request in a batch reported the identical batch dt)."""
+        return self.wait_s + self.service_s
 
 
 class ServingEngine:
@@ -56,8 +64,15 @@ class ServingEngine:
         self.completions: List[Completion] = []
 
     # -- request lifecycle ---------------------------------------------------
-    def submit(self, req: Request):
-        req.submitted_s = time.perf_counter()
+    def submit(self, req: Request, now_s: Optional[float] = None):
+        """``now_s`` lets a simulator stamp virtual submission time; the
+        default is the wall clock (live serving)."""
+        if now_s is not None:
+            req.submitted_s = now_s
+        elif req.submitted_s is None:
+            # keep a caller-stamped submission time (sim task factories
+            # pre-stamp virtual seconds; 0.0 is a valid virtual instant)
+            req.submitted_s = time.perf_counter()
         self.queue.append(req)
 
     def _step_terms(self, kind: str, seq: int, batch: int,
@@ -68,12 +83,18 @@ class ServingEngine:
         hbm = costmodel.step_hbm_bytes(self.cfg, seq, batch, kind)
         return energy.roofline(flops, hbm, 0.0, chips=chips)
 
-    def run_batch(self, now_hour: float = 0.0) -> List[Completion]:
+    def run_batch(self, now_hour: float = 0.0,
+                  now_s: Optional[float] = None) -> List[Completion]:
         """Serve up to batch_size queued requests as one batch.
 
         ``now_hour`` flows into routing and billing so a time-varying
         intensity provider on the router (TraceProvider/ForecastProvider)
-        is sampled at the request time, not at hour 0.
+        is sampled at the request time, not at hour 0. ``now_s`` is the
+        batch start on the same clock ``submitted_s`` was stamped with
+        (wall by default, virtual under the simulator) — each request's
+        queue wait is ``now_s - submitted_s``, and its service time runs
+        until *its own* last decoded token, so a short request in a long
+        batch no longer inherits the whole batch's dt.
         """
         if not self.queue:
             return []
@@ -87,27 +108,60 @@ class ServingEngine:
         pod = self.router.route(now_hour=now_hour)
         chips = self.router.pods[pod].chips
         t0 = time.perf_counter()
+        start_s = t0 if now_s is None else now_s
         cache, logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
         carbon = self.router.commit(pod, self._step_terms("prefill", S, B, chips),
                                     hour=now_hour)
+        prefill_elapsed = time.perf_counter() - t0
         max_new = max(r.max_new_tokens for r in batch)
         out = np.zeros((B, max_new), np.int32)
+        elapsed = np.zeros(max_new)     # service elapsed when token t exists
         tok = steps.greedy_sample(logits)[:, None]
         for t in range(max_new):
             out[:, t] = np.asarray(tok[:, 0])
+            elapsed[t] = time.perf_counter() - t0
+            if t == max_new - 1:
+                # token 0 came from prefill, so max_new tokens need only
+                # max_new - 1 decodes; running (and billing) a final
+                # decode whose sample is discarded inflated carbon by one
+                # step per batch
+                break
             logits, cache = self._decode(self.params, cache, tok, jnp.int32(S + t))
             carbon += self.router.commit(
                 pod, self._step_terms("decode", S + t + 1, B, chips),
                 hour=now_hour)
             tok = steps.greedy_sample(logits)[:, None]
-        dt = time.perf_counter() - t0
         comps = []
         for i, r in enumerate(batch):
+            # a zero-token request's service ends at prefill
+            service = (float(elapsed[r.max_new_tokens - 1])
+                       if r.max_new_tokens > 0 else prefill_elapsed)
             c = Completion(r.uid, out[i, : r.max_new_tokens].tolist(), pod,
-                           dt, carbon / B)
+                           wait_s=max(0.0, start_s - r.submitted_s),
+                           service_s=service,
+                           carbon_g=carbon / B)
             comps.append(c)
             self.completions.append(c)
         return comps
+
+    # -- sim integration -----------------------------------------------------
+    def step(self, now_hour: float = 0.0,
+             limit: Optional[int] = None) -> List[Completion]:
+        """:class:`repro.sim.driver.BatchExecutor` interface: the sim
+        driver's executor hook. ``limit`` caps this batch; virtual batch
+        start is derived from ``now_hour`` so waits stay on sim time."""
+        # hours -> virtual seconds inline: the runtime layer must not
+        # depend on repro.sim (the sim drives the runtime, not vice versa)
+        now_s = now_hour * 3600.0
+        if limit is None:
+            return self.run_batch(now_hour, now_s=now_s)
+        if limit <= 0:
+            return []           # match CarbonEdgeEngine.step(limit=0)
+        old, self.batch_size = self.batch_size, limit
+        try:
+            return self.run_batch(now_hour, now_s=now_s)
+        finally:
+            self.batch_size = old
 
     def run_all(self, now_hour: float = 0.0) -> List[Completion]:
         done = []

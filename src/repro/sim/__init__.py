@@ -1,0 +1,23 @@
+"""Discrete-event carbon-aware serving simulator (DESIGN.md §2).
+
+Drives the engine/serving stack through simulated time: seeded arrival
+processes -> event heap -> batched ``CarbonEdgeEngine.step`` calls with an
+advancing ``now_hour`` -> queueing/SLO/carbon metrics.
+"""
+from repro.sim.arrivals import (ArrivalProcess, ConstantRateArrivals,
+                                DiurnalArrivals, MMPPArrivals,
+                                PoissonArrivals, TraceReplayArrivals)
+from repro.sim.clock import VirtualClock, hours_to_s, ms_to_hours, s_to_hours
+from repro.sim.driver import AsyncEngineDriver, BatchExecutor
+from repro.sim.events import Event, EventHeap, EventKind
+from repro.sim.metrics import (MetricsCollector, TaskRecord, TimelineSample,
+                               WAIT_HIST_EDGES_S)
+
+__all__ = [
+    "ArrivalProcess", "ConstantRateArrivals", "DiurnalArrivals",
+    "MMPPArrivals", "PoissonArrivals", "TraceReplayArrivals",
+    "VirtualClock", "hours_to_s", "ms_to_hours", "s_to_hours",
+    "AsyncEngineDriver", "BatchExecutor",
+    "Event", "EventHeap", "EventKind",
+    "MetricsCollector", "TaskRecord", "TimelineSample", "WAIT_HIST_EDGES_S",
+]

@@ -1,0 +1,43 @@
+"""Virtual clock for the discrete-event simulator (DESIGN.md §2).
+
+Simulated time is measured in *hours* — the same unit every
+``CarbonIntensityProvider`` and ``now_hour`` argument in the engine stack
+already speaks — so the clock value flows unconverted into scheduling,
+billing and deferral planning. Task service times arrive in milliseconds
+from the cluster; :func:`ms_to_hours` is the single conversion point.
+"""
+from __future__ import annotations
+
+MS_PER_HOUR = 3.6e6
+
+
+def ms_to_hours(ms: float) -> float:
+    return ms / MS_PER_HOUR
+
+
+def hours_to_s(hours: float) -> float:
+    return hours * 3600.0
+
+
+def s_to_hours(s: float) -> float:
+    return s / 3600.0
+
+
+class VirtualClock:
+    """Monotonic simulated clock. Only the event loop advances it."""
+
+    def __init__(self, start_hour: float = 0.0):
+        self._now = float(start_hour)
+
+    @property
+    def hour(self) -> float:
+        return self._now
+
+    def advance_to(self, hour: float) -> float:
+        """Move to ``hour``; rejects travel into the past — an event popped
+        out of order means the heap invariant broke, fail loudly."""
+        if hour < self._now - 1e-12:
+            raise ValueError(
+                f"clock cannot run backwards: at {self._now}, asked for {hour}")
+        self._now = max(self._now, float(hour))
+        return self._now

@@ -1,0 +1,242 @@
+"""Async engine driver: the discrete-event serving loop (DESIGN.md §2).
+
+:class:`AsyncEngineDriver` interleaves an arrival process with batched
+executor steps through simulated time:
+
+- ``ARRIVAL`` events materialise tasks (via ``task_factory``) and enqueue
+  them on the executor; deferrable tasks (``deadline_hours > 0``) are
+  instead *planned* through :func:`repro.core.temporal.plan_wake` against
+  the driver's forecast provider and parked until their ``DEFER_WAKE``;
+- ``BATCH_READY`` events drain up to ``max_batch`` pending tasks in one
+  ``executor.step(now_hour=clock.hour, limit=...)`` call — with the
+  default :class:`~repro.core.api.CarbonEdgeEngine` that is one (B, N, 8)
+  featurize + one vectorized/Pallas scorer invocation per event batch,
+  not one per task — honouring the executor's busy time so queueing
+  delay emerges from load rather than being assumed;
+- ``INTENSITY_TICK`` events sample the carbon-vs-latency timeline.
+
+``now_hour`` is always the virtual clock, so every provider read (policy
+scoring, cluster billing, monitor billing) tracks simulated time — the
+property :meth:`CarbonEdgeEngine.run` cannot offer (it freezes the hour
+for the whole drain).
+
+Executors: anything with ``submit(task)`` and
+``step(now_hour, limit) -> results`` — ``CarbonEdgeEngine`` natively, and
+``runtime.serving.ServingEngine`` through its ``step`` alias. Results
+expose either ``latency_ms`` (serial cluster: service times accumulate)
+or ``service_s`` (parallel serving batch: the batch occupies the executor
+for its max service time). Note the determinism contract (DESIGN.md
+§2.2) covers modelled executors only: a ServingEngine measures real
+wall-clock service, so its runs repeat only up to host timing noise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Protocol, Sequence, runtime_checkable
+
+from repro.sim.arrivals import ArrivalProcess
+from repro.sim.clock import VirtualClock, hours_to_s, ms_to_hours, s_to_hours
+from repro.sim.events import EventHeap, EventKind
+from repro.sim.metrics import MetricsCollector, TaskRecord, TimelineSample
+
+
+@runtime_checkable
+class BatchExecutor(Protocol):
+    """What the driver needs from an engine."""
+
+    def submit(self, task) -> object: ...
+
+    def step(self, now_hour: float = 0.0,
+             limit: Optional[int] = None) -> Sequence: ...
+
+
+@dataclass
+class _Pending:
+    uid: int
+    submit_hour: float
+    deferred_hours: float = 0.0
+
+
+class AsyncEngineDriver:
+    """Drive a batch executor through simulated time under an arrival
+    process, producing queueing/SLO/carbon metrics.
+
+    ``task_factory(uid, hour)`` builds the submitted object (a ``Task``,
+    ``DeferrableTask`` or serving ``Request``). When ``forecast`` is given
+    (any provider; a :class:`~repro.core.api.ForecastProvider` uses its
+    ``window``), tasks with ``deadline_hours > 0`` are deferred to the
+    minimum-forecast-intensity slot within their deadline.
+    """
+
+    def __init__(self, executor: BatchExecutor, arrivals: ArrivalProcess,
+                 task_factory: Callable[[int, float], object], *,
+                 start_hour: float = 0.0, horizon_hours: float = 1.0,
+                 max_batch: int = 8, batch_window_hours: float = 0.0,
+                 forecast=None, slot_hours: float = 0.5,
+                 slo_latency_s: Optional[float] = None,
+                 tick_hours: float = 0.0):
+        self.executor = executor
+        self.arrivals = arrivals
+        self.task_factory = task_factory
+        self.start_hour = start_hour
+        self.horizon_hours = horizon_hours
+        self.max_batch = max_batch
+        self.batch_window_hours = batch_window_hours
+        self.forecast = forecast
+        self.slot_hours = slot_hours
+        self.tick_hours = tick_hours
+        self.clock = VirtualClock(start_hour)
+        self.heap = EventHeap()
+        self.metrics = MetricsCollector(slo_latency_s=slo_latency_s)
+        self._pending: List[_Pending] = []   # FIFO, mirrors executor queue
+        self._flush_scheduled = False
+        self._busy_until = start_hour
+        self._uid = 0
+
+    # -- planning ------------------------------------------------------------
+    def _plan(self, task, now: float) -> float:
+        """Wake hour for a deferrable task (== now when not deferrable or
+        no forecast/cluster to plan against)."""
+        if self.forecast is None or getattr(task, "deadline_hours", 0.0) <= 0:
+            return now
+        cluster = getattr(self.executor, "cluster", None)
+        if cluster is None:
+            return now
+        from repro.core.temporal import plan_wake
+        return plan_wake(self.forecast, cluster, task, now,
+                         slot_hours=self.slot_hours)
+
+    # -- event handlers ------------------------------------------------------
+    def _enqueue(self, uid: int, task, submit_hour: float,
+                 deferred_hours: float, now: float) -> None:
+        # Keep the executor's own clock on sim time: a serving Request
+        # not pre-stamped by the factory would otherwise get a *wall*
+        # submission stamp and mix clocks in Completion.wait_s.
+        if hasattr(task, "submitted_s") and task.submitted_s is None:
+            task.submitted_s = hours_to_s(submit_hour)
+        self.executor.submit(task)
+        self._pending.append(_Pending(uid, submit_hour, deferred_hours))
+        if len(self._pending) >= self.max_batch:
+            # Flush immediately, even past an already-scheduled window
+            # flush — the later event then drains whatever is pending (or
+            # nothing) and reschedules harmlessly.
+            self.heap.push(now, EventKind.BATCH_READY)
+            self._flush_scheduled = True
+        else:
+            self._schedule_flush(now + self.batch_window_hours)
+
+    def _schedule_flush(self, at_hour: float) -> None:
+        if not self._flush_scheduled:
+            self._flush_scheduled = True
+            self.heap.push(at_hour, EventKind.BATCH_READY)
+
+    def _on_arrival(self, now: float) -> None:
+        self._uid += 1
+        uid = self._uid
+        task = self.task_factory(uid, now)
+        wake = self._plan(task, now)
+        if wake > now + 1e-12:
+            self.heap.push(wake, EventKind.DEFER_WAKE,
+                           payload=(uid, task, now, wake - now))
+        else:
+            self._enqueue(uid, task, now, 0.0, now)
+
+    def _monitor(self):
+        """The executor's CarbonMonitor: directly on a CarbonEdgeEngine,
+        behind the router on a ServingEngine."""
+        m = getattr(self.executor, "monitor", None)
+        if m is None:
+            m = getattr(getattr(self.executor, "router", None),
+                        "monitor", None)
+        return m
+
+    def _record_batch(self, results: Sequence, exec_hour: float,
+                      batch_energy_kwh: Optional[float] = None) -> float:
+        """Emit TaskRecords for ``results`` against the pending FIFO head;
+        returns the hour the executor frees up. ``batch_energy_kwh``
+        (the monitor's delta across the step) backfills executors whose
+        results carry no per-task energy, apportioned evenly like their
+        per-batch carbon."""
+        done, free = self._pending[:len(results)], exec_hour
+        self._pending = self._pending[len(results):]
+        t = exec_hour
+        for p, res in zip(done, results):
+            if hasattr(res, "latency_ms"):        # serial cluster result
+                t += ms_to_hours(res.latency_ms)
+                finish = t
+                free = t
+            else:                                 # parallel serving batch
+                finish = exec_hour + s_to_hours(getattr(res, "service_s", 0.0))
+                free = max(free, finish)
+            energy = getattr(res, "energy_kwh", None)
+            if energy is None:
+                energy = (batch_energy_kwh / len(results)
+                          if batch_energy_kwh is not None else 0.0)
+            self.metrics.add(TaskRecord(
+                uid=p.uid, submit_hour=p.submit_hour, start_hour=exec_hour,
+                finish_hour=finish,
+                node=getattr(res, "node", getattr(res, "pod", "")),
+                carbon_g=getattr(res, "carbon_g", 0.0),
+                energy_kwh=energy,
+                deferred_hours=p.deferred_hours))
+        return free
+
+    def _on_batch_ready(self, now: float) -> None:
+        self._flush_scheduled = False
+        if not self._pending:
+            return
+        if now < self._busy_until - 1e-12:        # executor still serving
+            self._schedule_flush(self._busy_until)
+            return
+        n = min(len(self._pending), self.max_batch)
+        monitor = self._monitor()
+        e0 = monitor.total_energy_kwh() if monitor is not None else None
+        results = self.executor.step(now_hour=now, limit=n)
+        e_batch = (monitor.total_energy_kwh() - e0
+                   if monitor is not None else None)
+        self._busy_until = self._record_batch(results, now, e_batch)
+        if self._pending:
+            self._schedule_flush(max(self._busy_until,
+                                     now + self.batch_window_hours))
+
+    def _on_tick(self, now: float) -> None:
+        cluster = getattr(self.executor, "cluster", None)
+        provider = getattr(self.executor, "provider", None)
+        vals = []
+        if cluster is not None and provider is not None:
+            for name in cluster.nodes:
+                try:
+                    vals.append(provider.intensity(name, now))
+                except KeyError:
+                    pass
+        monitor = self._monitor()
+        carbon = monitor.total_carbon_g() if monitor is not None else \
+            sum(r.carbon_g for r in self.metrics.records)
+        self.metrics.add_sample(TimelineSample(
+            hour=now, completed=len(self.metrics.records),
+            carbon_g_cum=float(carbon),
+            mean_intensity=float(sum(vals) / len(vals)) if vals else 0.0))
+
+    # -- main loop -----------------------------------------------------------
+    def run(self) -> MetricsCollector:
+        for t in self.arrivals.times(self.start_hour, self.horizon_hours):
+            self.heap.push(float(t), EventKind.ARRIVAL)
+        if self.tick_hours > 0:
+            n_ticks = int(self.horizon_hours / self.tick_hours)
+            for k in range(1, n_ticks + 1):
+                self.heap.push(self.start_hour + k * self.tick_hours,
+                               EventKind.INTENSITY_TICK)
+        while self.heap:
+            ev = self.heap.pop()
+            now = self.clock.advance_to(ev.time_hours)
+            if ev.kind is EventKind.ARRIVAL:
+                self._on_arrival(now)
+            elif ev.kind is EventKind.DEFER_WAKE:
+                uid, task, submit_hour, deferred = ev.payload
+                self._enqueue(uid, task, submit_hour, deferred, now)
+            elif ev.kind is EventKind.BATCH_READY:
+                self._on_batch_ready(now)
+            elif ev.kind is EventKind.INTENSITY_TICK:
+                self._on_tick(now)
+        assert not self._pending, "event loop ended with tasks still queued"
+        return self.metrics

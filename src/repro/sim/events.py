@@ -1,0 +1,63 @@
+"""Event model for the discrete-event simulator (DESIGN.md §2).
+
+Four event kinds drive the serving loop:
+
+- ``ARRIVAL``        — a request enters the system (payload: the task);
+- ``BATCH_READY``    — the driver should drain a batch through the engine;
+- ``DEFER_WAKE``     — a deferred task's planned green slot has arrived;
+- ``INTENSITY_TICK`` — periodic sample point for the carbon/latency timeline.
+
+Determinism contract: events are totally ordered by
+``(time_hours, seq)`` where ``seq`` is a per-heap monotonic counter
+assigned at push time. Two events at the same simulated instant therefore
+pop in *insertion* order — no hash ordering, no RNG, no wall clock — so a
+run is a pure function of (arrival process seed, scenario parameters).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, List, Optional
+
+
+class EventKind(Enum):
+    ARRIVAL = "arrival"
+    BATCH_READY = "batch_ready"
+    DEFER_WAKE = "defer_wake"
+    INTENSITY_TICK = "intensity_tick"
+
+
+@dataclass(frozen=True, order=True)
+class Event:
+    time_hours: float
+    seq: int
+    kind: EventKind = field(compare=False)
+    payload: Any = field(compare=False, default=None)
+
+
+class EventHeap:
+    """Min-heap of :class:`Event` with deterministic FIFO tie-breaking."""
+
+    def __init__(self):
+        self._heap: List[Event] = []
+        self._seq = 0
+
+    def push(self, time_hours: float, kind: EventKind,
+             payload: Any = None) -> Event:
+        ev = Event(float(time_hours), self._seq, kind, payload)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

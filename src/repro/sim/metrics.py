@@ -1,0 +1,133 @@
+"""Queueing / SLO / carbon metrics for the serving simulator (DESIGN.md §2).
+
+The driver appends one :class:`TaskRecord` per completed task and one
+timeline sample per ``INTENSITY_TICK``; :class:`MetricsCollector.summary`
+reduces them to the report the benchmarks and CI smoke assert on:
+per-task queueing delay, p50/p95/p99 end-to-end latency, SLO-violation
+rate, deferral counts, and the carbon-vs-latency timeline.
+
+Determinism contract: :meth:`MetricsCollector.to_text` renders every float
+through one fixed ``%.9g`` format, so two same-seed runs produce
+byte-identical reports (regression-tested).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.sim.clock import hours_to_s
+
+# Fixed queueing-delay histogram edges (seconds, log-spaced); stable bins
+# keep same-seed reports byte-comparable and cross-scenario comparable.
+WAIT_HIST_EDGES_S = (0.0, 0.001, 0.01, 0.1, 1.0, 10.0, 60.0, 600.0, 3600.0,
+                     float("inf"))
+
+
+@dataclass(frozen=True)
+class TaskRecord:
+    uid: int
+    submit_hour: float
+    start_hour: float            # when its batch began executing
+    finish_hour: float           # start + its serial position's service time
+    node: str
+    carbon_g: float
+    energy_kwh: float
+    deferred_hours: float = 0.0  # planned wake delay (0 = ran immediately)
+
+    @property
+    def wait_s(self) -> float:
+        return hours_to_s(self.start_hour - self.submit_hour)
+
+    @property
+    def service_s(self) -> float:
+        return hours_to_s(self.finish_hour - self.start_hour)
+
+    @property
+    def latency_s(self) -> float:
+        return hours_to_s(self.finish_hour - self.submit_hour)
+
+
+@dataclass(frozen=True)
+class TimelineSample:
+    hour: float
+    completed: int
+    carbon_g_cum: float
+    mean_intensity: float        # fleet-mean grid signal at this instant
+
+
+def _pct(xs: np.ndarray, q: float) -> float:
+    return float(np.percentile(xs, q)) if xs.size else 0.0
+
+
+@dataclass
+class MetricsCollector:
+    slo_latency_s: Optional[float] = None
+    records: List[TaskRecord] = field(default_factory=list)
+    timeline: List[TimelineSample] = field(default_factory=list)
+    deferred_tasks: int = 0
+
+    def add(self, rec: TaskRecord) -> None:
+        self.records.append(rec)
+        if rec.deferred_hours > 0:
+            self.deferred_tasks += 1
+
+    def add_sample(self, s: TimelineSample) -> None:
+        self.timeline.append(s)
+
+    # -- reductions ---------------------------------------------------------
+    def wait_histogram(self) -> List[int]:
+        waits = [r.wait_s for r in self.records]
+        hist, _ = np.histogram(waits, bins=np.array(WAIT_HIST_EDGES_S))
+        return [int(c) for c in hist]
+
+    def summary(self) -> Dict:
+        waits = np.array([r.wait_s for r in self.records])
+        lats = np.array([r.latency_s for r in self.records])
+        n = len(self.records)
+        viol = (int(np.sum(lats > self.slo_latency_s))
+                if self.slo_latency_s is not None else 0)
+        carbon = float(sum(r.carbon_g for r in self.records))
+        return {
+            "tasks": n,
+            "carbon_g_total": carbon,
+            "carbon_g_per_task": carbon / n if n else 0.0,
+            "energy_kwh_total": float(sum(r.energy_kwh for r in self.records)),
+            "wait_s_mean": float(np.mean(waits)) if n else 0.0,
+            "wait_s_p50": _pct(waits, 50), "wait_s_p95": _pct(waits, 95),
+            "wait_s_p99": _pct(waits, 99),
+            "latency_s_p50": _pct(lats, 50), "latency_s_p95": _pct(lats, 95),
+            "latency_s_p99": _pct(lats, 99),
+            "slo_latency_s": self.slo_latency_s,
+            "slo_violations": viol,
+            "slo_violation_rate": viol / n if n else 0.0,
+            "deferred_tasks": self.deferred_tasks,
+            "wait_histogram": self.wait_histogram(),
+        }
+
+    # -- deterministic rendering --------------------------------------------
+    def to_text(self) -> str:
+        """Canonical report: one ``%.9g``-formatted line per metric, per
+        timeline sample and per task — the byte-identity surface for the
+        seed-determinism regression test and the CI sim smoke."""
+        s = self.summary()
+        lines = []
+        for k in sorted(s):
+            v = s[k]
+            if isinstance(v, float):
+                lines.append(f"{k}={v:.9g}")
+            elif isinstance(v, list):
+                lines.append(f"{k}=[{','.join(str(x) for x in v)}]")
+            else:
+                lines.append(f"{k}={v}")
+        for t in self.timeline:
+            lines.append(f"tick hour={t.hour:.9g} completed={t.completed} "
+                         f"carbon_g={t.carbon_g_cum:.9g} "
+                         f"intensity={t.mean_intensity:.9g}")
+        for r in self.records:
+            lines.append(
+                f"task uid={r.uid} node={r.node} submit={r.submit_hour:.9g} "
+                f"start={r.start_hour:.9g} finish={r.finish_hour:.9g} "
+                f"carbon_g={r.carbon_g:.9g} deferred_h={r.deferred_hours:.9g}")
+        return "\n".join(lines) + "\n"
