@@ -8,10 +8,10 @@ from __future__ import annotations
 
 
 def main() -> None:
-    from benchmarks import (fig2_tradeoff, fig3_weight_sweep, overhead,
-                            roofline, sim_serving, table2_carbon_footprint,
-                            table4_multi_model, table5_node_distribution,
-                            temporal_shifting)
+    from benchmarks import (fig2_tradeoff, fig3_weight_sweep, fleet_scale,
+                            overhead, roofline, sim_serving,
+                            table2_carbon_footprint, table4_multi_model,
+                            table5_node_distribution, temporal_shifting)
 
     rows = []
 
@@ -43,6 +43,16 @@ def main() -> None:
                  "paper_us=30"))
     rows.append(("scheduler_vectorised_100k_nodes", ov["vector_100k_nodes_us"],
                  f"ns_per_node={ov['vector_ns_per_node']:.1f}"))
+
+    fs = fleet_scale.run()
+    top = max(fs["select"], key=lambda r: (r["n_nodes"], r["batch"]))
+    rows.append((f"fleet_scale_{top['n_nodes']}n_{top['batch']}b_per_task",
+                 top["cached_per_task_ms"] * 1e3,
+                 f"speedup_vs_rebuild_x={top['speedup_x']:.0f}"))
+    wk = max(fs["plan_wake"], key=lambda r: r["n_nodes"])
+    rows.append((f"fleet_scale_plan_wake_{wk['n_nodes']}n",
+                 wk["batched_ms"] * 1e3,
+                 f"speedup_vs_scalar_x={wk['speedup_x']:.0f}"))
 
     ts = temporal_shifting.run(deadlines=(16.0,))
     rows.append(("beyond_paper_temporal_shifting", 0.0,

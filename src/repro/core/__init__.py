@@ -12,10 +12,14 @@ _API = {
     "StaticProvider": "repro.core.api",
     "TraceProvider": "repro.core.api",
     "ForecastProvider": "repro.core.api",
+    "FallbackProvider": "repro.core.api",
+    "intensity_batch": "repro.core.api",
     "WeightedScoringPolicy": "repro.core.policy",
     "VectorizedPolicy": "repro.core.policy",
     "TemporalPolicy": "repro.core.policy",
     "featurize": "repro.core.policy",
+    "featurize_cached": "repro.core.policy",
+    "FeatureCache": "repro.core.featcache",
 }
 
 __all__ = sorted(_API)

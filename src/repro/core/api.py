@@ -40,10 +40,37 @@ from repro.core.scheduler import MODES, Task, Weights
 
 @runtime_checkable
 class CarbonIntensityProvider(Protocol):
-    """Single source of grid carbon intensity (gCO2/kWh) per node/region."""
+    """Single source of grid carbon intensity (gCO2/kWh) per node/region.
+
+    Providers *may* additionally implement the batched form
+    ``intensity_batch(names, hours)`` (see :func:`intensity_batch` for the
+    contract); callers go through the module-level helper, which falls back
+    to per-name ``intensity`` calls for providers that don't.
+    """
 
     def intensity(self, node: str, hour: float = 0.0) -> float:
         ...
+
+
+def intensity_batch(provider: CarbonIntensityProvider,
+                    names: Sequence[str], hours) -> np.ndarray:
+    """Batched provider read — the fleet-scale hot path (DESIGN.md §3).
+
+    ``hours`` is a scalar or an (S,) array; returns ``(N,)`` respectively
+    ``(S, N)`` gCO2/kWh for the N ``names``. Dispatches to the provider's
+    vectorized ``intensity_batch`` when it has one (all bundled providers
+    do); any custom provider is served by a per-name/per-hour fallback loop
+    with identical semantics — including raising ``KeyError`` for uncovered
+    nodes, so partial-coverage masking stays with the caller.
+    """
+    fn = getattr(provider, "intensity_batch", None)
+    if fn is not None:
+        return fn(names, hours)
+    h = np.asarray(hours, dtype=float)
+    if h.ndim == 0:
+        return np.array([provider.intensity(n, float(h)) for n in names])
+    return np.array([[provider.intensity(n, float(t)) for n in names]
+                     for t in h])
 
 
 @dataclass(frozen=True)
@@ -53,11 +80,24 @@ class StaticProvider:
     table: Mapping[str, float]
     default: Optional[float] = None
 
+    # Hour-independent: the FeatureCache may reuse answers across steps.
+    TIME_INVARIANT = True
+
     def intensity(self, node: str, hour: float = 0.0) -> float:
         v = self.table.get(node, self.default)
         if v is None:
             raise KeyError(f"no carbon intensity registered for {node!r}")
         return v
+
+    def intensity_batch(self, names: Sequence[str], hours) -> np.ndarray:
+        vals = np.array([self.intensity(n) for n in names], dtype=float)
+        h = np.asarray(hours, dtype=float)
+        if h.ndim == 0:
+            return vals
+        return np.broadcast_to(vals, (h.size, len(names))).copy()
+
+    def covers(self, node: str) -> bool:
+        return self.default is not None or node in self.table
 
     @classmethod
     def from_cluster(cls, cluster: EdgeCluster) -> "StaticProvider":
@@ -85,6 +125,54 @@ class TraceProvider:
             return self.fallback.intensity(node, hour)
         raise KeyError(f"no trace or fallback intensity for {node!r}")
 
+    def intensity_batch(self, names: Sequence[str], hours) -> np.ndarray:
+        from repro.core.temporal import IntensityTrace
+
+        h = np.asarray(hours, dtype=float)
+        hs = h.reshape(-1)
+        out = np.empty((hs.size, len(names)))
+        missing = []
+        rows, row_cols = [], []
+        for j, n in enumerate(names):
+            tr = self.traces.get(n)
+            if tr is None:
+                missing.append(j)
+                continue
+            # Joint interpolation only for genuine IntensityTrace semantics
+            # (a user trace with a .values table but its own .at must keep
+            # its own sampling — batch must stay bit-identical to scalar).
+            if type(tr).at is IntensityTrace.at:
+                rows.append(tr.values)     # hourly table: joint interpolation
+                row_cols.append(j)
+            else:
+                # a user-supplied trace type: sample through its .at —
+                # array-aware when it accepts arrays, per hour otherwise
+                try:
+                    out[:, j] = tr.at(hs)
+                except (TypeError, ValueError):
+                    out[:, j] = [tr.at(float(t)) for t in hs]
+        if rows:
+            # one joint interpolation over all (name, hour) pairs, through
+            # the same arithmetic IntensityTrace.at evaluates
+            from repro.core.temporal import interp_hourly
+
+            V = np.asarray(rows, dtype=float)              # (M, 24)
+            out[:, row_cols] = interp_hourly(V, hs).T      # (M, S) -> (S, M)
+        if missing:
+            if self.fallback is None:
+                raise KeyError(
+                    f"no trace or fallback intensity for {names[missing[0]]!r}")
+            sub = intensity_batch(self.fallback,
+                                  [names[j] for j in missing], hs)
+            out[:, missing] = np.asarray(sub).reshape(hs.size, len(missing))
+        return out[0] if h.ndim == 0 else out
+
+    def covers(self, node: str) -> bool:
+        if node in self.traces:
+            return True
+        cov = getattr(self.fallback, "covers", None)
+        return bool(cov(node)) if cov is not None else self.fallback is not None
+
 
 @dataclass(frozen=True)
 class FallbackProvider:
@@ -99,6 +187,53 @@ class FallbackProvider:
             return self.primary.intensity(node, hour)
         except KeyError:
             return self.fallback.intensity(node, hour)
+
+    def intensity_batch(self, names: Sequence[str], hours) -> np.ndarray:
+        # Fast split when the primary can report coverage (all bundled
+        # providers can): two batched calls, no per-name machinery.
+        cov = getattr(self.primary, "covers", None)
+        if cov is not None:
+            try:
+                covered = [j for j, n in enumerate(names) if cov(n)]
+                if len(covered) == len(names):
+                    return np.asarray(intensity_batch(self.primary, names,
+                                                      hours))
+                h = np.asarray(hours, dtype=float)
+                hs = h.reshape(-1)
+                out = np.empty((hs.size, len(names)))
+                uncovered = [j for j in range(len(names))
+                             if j not in set(covered)]
+                if covered:
+                    sub = intensity_batch(self.primary,
+                                          [names[j] for j in covered], hs)
+                    out[:, covered] = np.asarray(sub).reshape(hs.size,
+                                                              len(covered))
+                sub = intensity_batch(self.fallback,
+                                      [names[j] for j in uncovered], hs)
+                out[:, uncovered] = np.asarray(sub).reshape(hs.size,
+                                                            len(uncovered))
+                return out[0] if h.ndim == 0 else out
+            except KeyError:
+                pass      # optimistic covers(): degrade to per-name below
+        else:
+            try:
+                return np.asarray(intensity_batch(self.primary, names,
+                                                  hours))
+            except KeyError:
+                pass
+        # Coverage-opaque primary: resolve per name (each name still
+        # batched over all hours).
+        h = np.asarray(hours, dtype=float)
+        hs = h.reshape(-1)
+        cols = []
+        for n in names:
+            try:
+                col = intensity_batch(self.primary, [n], hs)
+            except KeyError:
+                col = intensity_batch(self.fallback, [n], hs)
+            cols.append(np.asarray(col).reshape(hs.size))
+        out = np.stack(cols, axis=1)
+        return out[0] if h.ndim == 0 else out
 
 
 @dataclass(frozen=True)
@@ -123,6 +258,23 @@ class ForecastProvider:
         half = self.smoothing_hours / 2.0
         ts = np.linspace(t - half, t + half, max(2, self.samples))
         return float(np.mean([self.base.intensity(node, float(x)) for x in ts]))
+
+    def intensity_batch(self, names: Sequence[str], hours) -> np.ndarray:
+        h = np.asarray(hours, dtype=float)
+        t = h + self.lead_hours
+        if self.smoothing_hours <= 0.0:
+            return np.asarray(intensity_batch(self.base, names,
+                                              t if t.ndim else float(t)))
+        half = self.smoothing_hours / 2.0
+        # np.linspace over array endpoints evaluates the exact scalar-path
+        # sample times per hour; mean over the sample axis matches the
+        # scalar np.mean ordering, keeping batch == scalar bit-identical.
+        ts = np.linspace(t - half, t + half, max(2, self.samples))  # (K, ...)
+        ts2 = ts.reshape(ts.shape[0], -1)                           # (K, S)
+        grids = [np.asarray(intensity_batch(self.base, names, ts2[k]))
+                 for k in range(ts2.shape[0])]
+        out = np.mean(grids, axis=0)                                # (S, N)
+        return out[0] if h.ndim == 0 else out
 
     def window(self, node: str, start_hour: float, end_hour: float,
                step_hours: float = 0.5) -> np.ndarray:

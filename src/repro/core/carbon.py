@@ -7,7 +7,7 @@ Tracks energy (Eq. 1: E = ∫ P dt, discretised) and emissions
   on this host we sample a process-CPU proxy),
 - ``record_step``: workload-derived — roofline step time x device power
   from the compiled artifact (core/energy.py), which lets the scheduler
-  score *before* executing (DESIGN.md §3).
+  score *before* executing (DESIGN.md §4).
 """
 from __future__ import annotations
 

@@ -53,6 +53,18 @@ class NodeState:
     def power_w(self, host_power_w: float) -> float:
         return self.spec.power_w or host_power_w * self.spec.cpu
 
+    def __setattr__(self, name, value):
+        # Change tracking for the incremental feature cache (DESIGN.md §3):
+        # any public-field mutation — whether by the engine, the cluster, or
+        # a test poking st.load directly — marks this node dirty in its
+        # owning cluster, so FeatureCache.sync() refreshes O(changed) rows
+        # instead of rebuilding all N.
+        object.__setattr__(self, name, value)
+        if not name.startswith("_"):
+            sink = getattr(self, "_dirty_sink", None)
+            if sink is not None:
+                sink.add(self.spec.name)
+
 
 @dataclass
 class TaskResult:
@@ -72,6 +84,50 @@ class EdgeCluster:
         self.pue = pue
         self.nodes: Dict[str, NodeState] = {n.name: NodeState(spec=n) for n in nodes}
         self.log: List[TaskResult] = []
+        # Incremental feature cache plumbing (DESIGN.md §3): every NodeState
+        # mutation lands its name in _dirty; topology changes bump _topo_rev
+        # (full rebuild). Mutating self.nodes directly bypasses both — use
+        # add_node() / remove_node(), or call invalidate_features().
+        self._dirty: set = set()
+        self._topo_rev = 0
+        self._feat_cache = None
+        for st in self.nodes.values():
+            st._dirty_sink = self._dirty
+
+    # -- topology ----------------------------------------------------------
+    def add_node(self, spec: NodeSpec) -> NodeState:
+        """Register a node after construction (fleet growth). Keeps the
+        feature cache honest — direct ``cluster.nodes[...] =`` writes do
+        not, and require :meth:`invalidate_features`."""
+        st = NodeState(spec=spec)
+        st._dirty_sink = self._dirty
+        self.nodes[spec.name] = st
+        self._topo_rev += 1
+        return st
+
+    def remove_node(self, name: str) -> None:
+        st = self.nodes.pop(name)
+        # Detach from dirty tracking: a late write to the removed state
+        # (e.g. an in-flight completion) must not land an unknown name in
+        # _dirty, which would demote every sync to a full O(N) rebuild.
+        st._dirty_sink = None
+        self._dirty.discard(name)
+        self._topo_rev += 1
+
+    def invalidate_features(self) -> None:
+        """Force a full feature-cache rebuild on next access (escape hatch
+        for callers that mutated ``self.nodes`` or node specs directly)."""
+        self._topo_rev += 1
+
+    def feature_cache(self):
+        """The cluster's incremental per-node feature columns (lazily
+        built, synced O(changed) on access) — see core/featcache.py."""
+        from repro.core.featcache import FeatureCache
+
+        if self._feat_cache is None:
+            self._feat_cache = FeatureCache(self)
+        self._feat_cache.sync()
+        return self._feat_cache
 
     # -- profiling ---------------------------------------------------------
     def profile(self, base_latency_ms: float) -> None:

@@ -1,5 +1,5 @@
 """Energy + roofline model (TPU v5e constants) — the workload-derived
-replacement for CodeCarbon's host measurement (DESIGN.md §3).
+replacement for CodeCarbon's host measurement (DESIGN.md §4).
 
 Three roofline terms per compiled step:
     compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)

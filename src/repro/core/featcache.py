@@ -1,0 +1,162 @@
+"""Incremental feature-state cache (DESIGN.md §3).
+
+``featurize`` (core/policy.py) rebuilds the (B, N, 8) feature tensor with a
+Python loop over all N nodes — and one ``provider.intensity`` call per
+node — on every engine step. At fleet scale (N >= 10^4) that loop *is* the
+scheduling overhead. :class:`FeatureCache` removes it:
+
+- the cluster owns persistent per-node **column arrays** (free cpu/mem,
+  load, avg time, running, derived E_est, static intensity);
+- every ``NodeState`` field write marks its node dirty (see
+  ``NodeState.__setattr__``), so :meth:`sync` refreshes **O(changed)** rows
+  — an engine step that executed B tasks re-reads B rows, not N;
+- grid intensity is fetched through the **batched provider API**
+  (``api.intensity_batch``: one vectorized call, not N Python calls) and
+  memoized per (provider, hour) — a ``TIME_INVARIANT`` provider (e.g.
+  ``StaticProvider``) is queried at most once per node, ever;
+- only nodes some task in the batch could actually use are queried
+  (``need`` mask), preserving ``featurize``'s partial-coverage-provider
+  guarantee.
+
+Row refreshes use the *same scalar arithmetic* as ``featurize``'s per-node
+loop, so cached columns are bit-identical to a fresh featurize — the fresh
+path survives as the parity oracle (tests/test_featcache.py).
+
+Invalidation contract:
+- ``NodeState`` field writes        -> automatic (dirty set)
+- ``EdgeCluster.add_node/remove_node`` -> automatic (topology rev, rebuild)
+- direct ``cluster.nodes[...] =`` surgery, ``host_power_w`` or ``NodeSpec``
+  replacement -> caller must call ``cluster.invalidate_features()``
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.scheduler import LOAD_THRESHOLD
+
+
+class FeatureCache:
+    """Persistent per-node feature columns for one :class:`EdgeCluster`.
+
+    Obtain via ``cluster.feature_cache()`` (which syncs); do not construct
+    one per step.
+    """
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self._rebuild()
+
+    # -- construction / refresh -------------------------------------------
+    def _alloc(self, n: int) -> None:
+        self.n = n
+        for col in ("cpu", "mem_mb", "load", "mem_used", "free_cpu",
+                    "free_mem", "avg_time_ms", "avg_time_s", "running",
+                    "power", "e_est", "carbon_static"):
+            setattr(self, col, np.zeros(n))
+
+    def _refresh_row(self, i: int, st) -> None:
+        # Scalar per-row math, in exactly featurize's evaluation order, so
+        # cached columns bit-match the fresh per-node loop.
+        spec = st.spec
+        self.cpu[i] = spec.cpu
+        self.mem_mb[i] = spec.mem_mb
+        self.load[i] = st.load
+        self.mem_used[i] = st.mem_used_mb
+        self.free_cpu[i] = spec.cpu * (1.0 - st.load)
+        self.free_mem[i] = spec.mem_mb - st.mem_used_mb
+        self.avg_time_ms[i] = st.avg_time_ms
+        self.avg_time_s[i] = st.avg_time_ms / 1000.0
+        self.running[i] = st.running
+        p = st.power_w(self.cluster.host_power_w)
+        self.power[i] = p
+        self.e_est[i] = p * st.avg_time_ms / 3.6e6
+        self.carbon_static[i] = spec.carbon_intensity
+
+    def _rebuild(self) -> None:
+        cl = self.cluster
+        self.names: List[str] = list(cl.nodes)
+        self.index = {n: i for i, n in enumerate(self.names)}
+        self._alloc(len(self.names))
+        for i, st in enumerate(cl.nodes.values()):
+            # Adopt states inserted by direct cluster.nodes surgery (the
+            # invalidate_features() escape hatch): without a dirty sink
+            # their future mutations would go untracked.
+            if getattr(st, "_dirty_sink", None) is not cl._dirty:
+                st._dirty_sink = cl._dirty
+            self._refresh_row(i, st)
+        cl._dirty.clear()
+        self._topo_seen = cl._topo_rev
+        self._reset_intensity_cache()
+
+    def sync(self) -> None:
+        """Bring columns up to date: O(changed) row refreshes, or a full
+        rebuild when the fleet's membership changed."""
+        cl = self.cluster
+        if self._topo_seen != cl._topo_rev or self.n != len(cl.nodes):
+            self._rebuild()
+            return
+        if cl._dirty:
+            nodes = cl.nodes
+            index = self.index
+            for name in cl._dirty:
+                i = index.get(name)
+                if i is None:          # name we never indexed: stale topo
+                    self._rebuild()
+                    return
+                self._refresh_row(i, nodes[name])
+            cl._dirty.clear()
+
+    # -- intensity memoization --------------------------------------------
+    def _reset_intensity_cache(self) -> None:
+        self._int_provider = None
+        self._int_hour = None
+        self._int_vals = np.zeros(self.n)
+        self._int_have = np.zeros(self.n, dtype=bool)
+
+    def intensities(self, provider, now_hour: float,
+                    need: Optional[np.ndarray] = None) -> np.ndarray:
+        """(N,) per-node grid intensity; entries are valid where ``need``
+        (all nodes when None). ``provider=None`` returns the static
+        regional column. Nodes already fetched under the current
+        (provider, hour) key — or under the provider alone when it declares
+        ``TIME_INVARIANT`` — are served from cache; the rest go through one
+        ``api.intensity_batch`` call.
+        """
+        if provider is None:
+            return self.carbon_static
+        invariant = getattr(provider, "TIME_INVARIANT", False)
+        if provider is not self._int_provider or (
+                not invariant and now_hour != self._int_hour):
+            self._int_provider = provider
+            self._int_vals = np.zeros(self.n)
+            self._int_have = np.zeros(self.n, dtype=bool)
+        self._int_hour = now_hour
+        missing = ~self._int_have if need is None else (need & ~self._int_have)
+        if missing.any():
+            from repro.core.api import intensity_batch
+
+            idx = np.nonzero(missing)[0]
+            vals = intensity_batch(provider, [self.names[i] for i in idx],
+                                   now_hour)
+            self._int_vals[idx] = np.asarray(vals, dtype=float)
+            self._int_have[idx] = True
+        return self._int_vals
+
+    # -- masks -------------------------------------------------------------
+    def node_ok(self, latency_threshold_ms: float = float("inf")) -> np.ndarray:
+        """(N,) Algorithm-1 line-3 filter: overload cut-off plus the
+        policy's latency threshold."""
+        ok = self.load <= LOAD_THRESHOLD
+        if latency_threshold_ms != float("inf"):
+            ok = ok & (self.avg_time_ms <= latency_threshold_ms)
+        return ok
+
+    def feasible(self, task_cpu: np.ndarray, task_mem: np.ndarray,
+                 latency_threshold_ms: float = float("inf")) -> np.ndarray:
+        """(B, N) feasibility for B tasks given as (B,) cpu/mem arrays —
+        the vectorized ``node_feasible`` (+ latency filter)."""
+        return (self.node_ok(latency_threshold_ms)[None, :]
+                & (self.free_cpu[None, :] >= np.asarray(task_cpu)[:, None])
+                & (self.free_mem[None, :] >= np.asarray(task_mem)[:, None]))

@@ -101,6 +101,47 @@ def featurize(cluster: EdgeCluster, tasks: Sequence[Task],
     return F, names
 
 
+def featurize_cached(cache, tasks: Sequence[Task],
+                     provider: Optional[CarbonIntensityProvider] = None,
+                     now_hour: float = 0.0,
+                     latency_threshold_ms: float = 5000.0,
+                     dtype=np.float64) -> Tuple[np.ndarray, List[str]]:
+    """(B, N, 8) feature tensor from a synced
+    :class:`~repro.core.featcache.FeatureCache` — same layout and *bit-
+    identical values* as :func:`featurize`, without the per-node Python
+    loop or the N per-node provider calls (grid intensity is one batched
+    read, memoized per (provider, hour), and only feasible nodes are
+    queried — the partial-coverage guarantee carries over).
+    """
+    B, N = len(tasks), cache.n
+    task_cpu = np.array([t.cpu for t in tasks], dtype)
+    task_mem = np.array([t.mem_mb for t in tasks], dtype)
+    F = np.zeros((B, N, FEATURE_DIM), dtype)
+    feasible = cache.feasible(task_cpu, task_mem, latency_threshold_ms)
+    ints = cache.intensities(provider, now_hour, need=feasible.any(axis=0))
+    cpu_frac = np.ones((B, N), dtype)
+    np.divide(cache.free_cpu[None, :], task_cpu[:, None], out=cpu_frac,
+              where=(task_cpu > 0)[:, None])
+    mem_frac = np.ones((B, N), dtype)
+    np.divide(cache.free_mem[None, :], task_mem[:, None], out=mem_frac,
+              where=(task_mem > 0)[:, None])
+    F[:, :, COL_CPU_FREE] = cpu_frac
+    F[:, :, COL_MEM_FREE] = mem_frac
+    F[:, :, COL_LOAD] = cache.load[None, :]
+    F[:, :, COL_TIME_S] = cache.avg_time_s[None, :]
+    F[:, :, COL_RUNNING] = cache.running[None, :]
+    F[:, :, COL_IXE] = np.where(feasible, (ints * cache.e_est)[None, :], 0.0)
+    F[:, :, COL_VALID] = feasible.astype(dtype)
+    return F, list(cache.names)
+
+
+def _get_cache(cluster):
+    """The cluster's synced FeatureCache, or None for cluster-likes that
+    don't carry one (anything without the EdgeCluster topology plumbing)."""
+    fc = getattr(cluster, "feature_cache", None)
+    return fc() if callable(fc) else None
+
+
 # ---------------------------------------------------------------------------
 # Scalar oracle (Algorithm 1 verbatim)
 # ---------------------------------------------------------------------------
@@ -154,16 +195,31 @@ class VectorizedPolicy:
       - ``"numpy"``  — float64 numpy (bit-matches the scalar oracle);
       - ``"pallas"`` — the ``kernels/node_score`` kernel (interpret mode off
         TPU), float32.
+
+    Fleet-scale fast path (DESIGN.md §3, on by default): features come
+    from the cluster's incremental :class:`~repro.core.featcache.
+    FeatureCache` (O(changed) per step instead of an O(N) Python rebuild),
+    duplicate task resource profiles share one scored row, the task axis
+    is chunked to bound peak memory, and Pallas shapes are padded to
+    power-of-two buckets so distinct (B, N) stop retriggering jit.
+    ``use_cache=False`` forces the fresh ``featurize`` rebuild — the
+    parity oracle for all of the above.
     """
 
     name = "vectorized"
 
+    # Bound on elements per (chunk x nodes) scoring block: ~64 MB of f64
+    # features per chunk at FEATURE_DIM=8.
+    _CHUNK_ELEMS = 1 << 20
+
     def __init__(self, backend: str = "auto",
-                 latency_threshold_ms: float = 5000.0):
+                 latency_threshold_ms: float = 5000.0,
+                 use_cache: bool = True):
         if backend not in ("auto", "numpy", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
         self.latency_threshold_ms = latency_threshold_ms
+        self.use_cache = use_cache
 
     def _resolved_backend(self) -> str:
         if self.backend != "auto":
@@ -188,29 +244,151 @@ class VectorizedPolicy:
         return total.reshape(F.shape[0], F.shape[1])
 
     @staticmethod
-    def _score_pallas(F: np.ndarray, w5: np.ndarray) -> np.ndarray:
+    def _bucket(n: int, floor: int = 8) -> int:
+        """Next power-of-two shape bucket: padding (B, N) to buckets keeps
+        the jit/Mosaic compile count logarithmic in fleet size instead of
+        one compile per distinct shape."""
+        b = floor
+        while b < n:
+            b <<= 1
+        return b
+
+    @classmethod
+    def _pad_to_buckets(cls, F: np.ndarray) -> np.ndarray:
+        B, N = F.shape[:2]
+        Bp, Np = cls._bucket(B), cls._bucket(N)
+        if (Bp, Np) == (B, N):
+            return np.asarray(F, np.float32)
+        Fp = np.zeros((Bp, Np, FEATURE_DIM), np.float32)
+        Fp[:B, :N] = F                 # pad rows: valid=0 -> masked out
+        return Fp
+
+    def _score_pallas(self, F: np.ndarray, w5: np.ndarray) -> np.ndarray:
         import jax.numpy as jnp
 
         from repro.kernels import ops
 
+        B, N = F.shape[:2]
         w8 = np.zeros(FEATURE_DIM, np.float32)
         w8[:5] = w5
-        out = ops.node_scores_batched(jnp.asarray(F, jnp.float32),
+        out = ops.node_scores_batched(jnp.asarray(self._pad_to_buckets(F)),
                                       jnp.asarray(w8))
-        return np.asarray(out, np.float64)
+        return np.asarray(out, np.float64)[:B, :N]
+
+    def _select_pallas_fused(self, F: np.ndarray, w5: np.ndarray):
+        """Fused score+argmax kernel: ships (B,) winner indices/scores to
+        host instead of the full (B, N) score matrix."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        B = F.shape[0]
+        w8 = np.zeros(FEATURE_DIM, np.float32)
+        w8[:5] = w5
+        idx, val = ops.select_best_node_fused(
+            jnp.asarray(self._pad_to_buckets(F)), jnp.asarray(w8))
+        return np.asarray(idx)[:B], np.asarray(val, np.float64)[:B]
+
+    def _select_from_features(self, F: np.ndarray, names: List[str],
+                              weights: Weights) -> List[Optional[str]]:
+        # Algorithm 1 requires a strictly positive score (best_score init 0).
+        if self._resolved_backend() == "pallas":
+            idx, val = self._select_pallas_fused(F, weights.as_array())
+            return [names[b] if v > 0.0 else None for b, v in zip(idx, val)]
+        totals = self._score_numpy(F, weights.as_array())
+        best = np.argmax(totals, axis=1)
+        return [names[b] if totals[i, b] > 0.0 else None
+                for i, b in enumerate(best)]
 
     # -- selection ---------------------------------------------------------
     def select_batch(self, cluster: EdgeCluster, tasks: Sequence[Task],
                      weights: Weights,
                      provider: Optional[CarbonIntensityProvider] = None,
                      now_hour: float = 0.0) -> List[Optional[str]]:
-        F, names = featurize(cluster, tasks, provider, now_hour,
-                             self.latency_threshold_ms)
-        totals = self.score_batch(F, weights)
-        best = np.argmax(totals, axis=1)
-        # Algorithm 1 requires a strictly positive score (best_score init 0).
-        return [names[b] if totals[i, b] > 0.0 else None
-                for i, b in enumerate(best)]
+        if not tasks:
+            return []
+        # Dedupe task resource profiles: the feature rows (and therefore
+        # the selection) depend only on (cpu, mem_mb), and batch rows are
+        # independent of their batch-mates — B identical tasks cost one
+        # scored row, not B.
+        keys = [(t.cpu, t.mem_mb) for t in tasks]
+        uniq: dict = {}
+        reps: List[Task] = []
+        for t, key in zip(tasks, keys):
+            if key not in uniq:
+                uniq[key] = len(reps)
+                reps.append(t)
+        chosen = self._select_unique(cluster, reps, weights, provider,
+                                     now_hour)
+        return [chosen[uniq[key]] for key in keys]
+
+    # Above this fleet size the numpy backend scores straight from the
+    # cache's column arrays (one (N,) task-independent component base per
+    # step + an (U, N) S_R/feasibility pass) instead of materializing the
+    # (B, N, 8) tensor — ~3-4x less memory traffic, at the cost of a
+    # last-ulp different summation order than vector_scores' dot product
+    # (argmax-equivalent except on sub-1e-12 score ties). Below it, the
+    # featurize_cached + vector_scores path keeps scoring bit-identical
+    # to the scalar oracle.
+    COLUMN_PATH_MIN_N = 4096
+
+    def _select_unique(self, cluster, reps: Sequence[Task], weights: Weights,
+                       provider, now_hour: float) -> List[Optional[str]]:
+        cache = _get_cache(cluster) if self.use_cache else None
+        if cache is None:
+            F, names = featurize(cluster, reps, provider, now_hour,
+                                 self.latency_threshold_ms)
+            return self._select_from_features(F, names, weights)
+        if (cache.n >= self.COLUMN_PATH_MIN_N
+                and self._resolved_backend() == "numpy"):
+            return self._select_cached_columns(cache, reps, weights,
+                                               provider, now_hour)
+        names = cache.names
+        chunk = max(1, self._CHUNK_ELEMS // max(cache.n, 1))
+        out: List[Optional[str]] = []
+        for lo in range(0, len(reps), chunk):
+            F, _ = featurize_cached(cache, reps[lo:lo + chunk], provider,
+                                    now_hour, self.latency_threshold_ms)
+            out.extend(self._select_from_features(F, names, weights))
+        return out
+
+    def _select_cached_columns(self, cache, reps: Sequence[Task],
+                               weights: Weights, provider,
+                               now_hour: float) -> List[Optional[str]]:
+        """Fleet-scale numpy selection straight from cache columns: the
+        task-independent components (S_L, S_P, S_B, S_C) are one (N,)
+        vector per step; only S_R and feasibility touch (U, N)."""
+        w = weights.as_array()
+        names = cache.names
+        task_cpu = np.array([t.cpu for t in reps], dtype=float)
+        task_mem = np.array([t.mem_mb for t in reps], dtype=float)
+        feasible = cache.feasible(task_cpu, task_mem,
+                                  self.latency_threshold_ms)     # (U, N)
+        ints = cache.intensities(provider, now_hour,
+                                 need=feasible.any(axis=0))
+        base = (w[1] * (1.0 - cache.load)
+                + w[2] * (1.0 / (1.0 + cache.avg_time_s))
+                + w[3] * (1.0 / (1.0 + cache.running * 2.0))
+                + w[4] * (1.0 / (1.0 + ints * cache.e_est)))     # (N,)
+        out: List[Optional[str]] = []
+        chunk = max(1, self._CHUNK_ELEMS // max(cache.n, 1))
+        for lo in range(0, len(reps), chunk):
+            tc = task_cpu[lo:lo + chunk, None]
+            tm = task_mem[lo:lo + chunk, None]
+            cpu_frac = np.ones((tc.shape[0], cache.n))
+            np.divide(cache.free_cpu[None, :], tc, out=cpu_frac,
+                      where=tc > 0)
+            mem_frac = np.ones((tm.shape[0], cache.n))
+            np.divide(cache.free_mem[None, :], tm, out=mem_frac,
+                      where=tm > 0)
+            s_r = (0.5 * np.minimum(1.0, cpu_frac)
+                   + 0.5 * np.minimum(1.0, mem_frac))
+            totals = np.where(feasible[lo:lo + chunk],
+                              w[0] * s_r + base[None, :], -np.inf)
+            best = np.argmax(totals, axis=1)
+            out.extend(names[b] if totals[i, b] > 0.0 else None
+                       for i, b in enumerate(best))
+        return out
 
     # Below this fleet size a single-task selection is cheaper through the
     # scalar loop than through featurize + array machinery (measured ~11 us
@@ -300,13 +478,22 @@ class TemporalPolicy:
         # For deferrable tasks the Eq. 4 column is rebuilt per slot below,
         # so skip the N provider queries featurize would otherwise spend on
         # a column that gets overwritten.
-        F, names = featurize(cluster, [task],
-                             None if duration > 0 else provider, now_hour,
-                             self.scorer.latency_threshold_ms)
+        slot_provider = None if duration > 0 else provider
+        cache = _get_cache(cluster) if self.scorer.use_cache else None
+        if cache is not None:
+            F, names = featurize_cached(cache, [task], slot_provider,
+                                        now_hour,
+                                        self.scorer.latency_threshold_ms)
+        else:
+            F, names = featurize(cluster, [task], slot_provider, now_hour,
+                                 self.scorer.latency_threshold_ms)
         G = np.repeat(F, n_slots, axis=0)                     # (S, N, 8)
         # per-node task energy (kWh) at its derived power draw
-        e_kwh = np.array([cluster.nodes[n].power_w(cluster.host_power_w)
-                          * duration / 1000.0 for n in names])
+        if cache is not None:
+            e_kwh = cache.power * duration / 1000.0
+        else:
+            e_kwh = np.array([cluster.nodes[n].power_w(cluster.host_power_w)
+                              * duration / 1000.0 for n in names])
         t0 = now_hour + np.arange(n_slots) * self.slot_hours
         mid = t0 + duration / 2.0
         # Slot-grid intensities only for feasible nodes — masked columns
@@ -318,9 +505,13 @@ class TemporalPolicy:
         feasible = F[0, :, COL_VALID] > 0.5
         I = np.zeros((n_slots, len(names)))                   # (S, N)
         if duration > 0:
-            for j, n in enumerate(names):
-                if feasible[j]:
-                    I[:, j] = [provider.intensity(n, float(m)) for m in mid]
+            idx = np.nonzero(feasible)[0]
+            if idx.size:
+                # the whole (S, N_feasible) slot grid in one batched read
+                from repro.core.api import intensity_batch
+                I[:, idx] = np.asarray(
+                    intensity_batch(provider, [names[j] for j in idx], mid)
+                ).reshape(n_slots, idx.size)
             G[:, :, COL_IXE] = I * e_kwh[None, :] * 1e3       # time-indexed S_C
         # duration == 0 (plain/urgent task): keep featurize's e_est-based
         # Eq. 4 column so the carbon weight still differentiates nodes; the

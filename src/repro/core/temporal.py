@@ -28,10 +28,25 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.api import StaticProvider, TraceProvider
+from repro.core.api import StaticProvider, TraceProvider, intensity_batch
 from repro.core.cluster import EdgeCluster
 from repro.core.policy import Placement, TemporalPolicy
 from repro.core.scheduler import Task, Weights, node_feasible
+
+
+def interp_hourly(values: np.ndarray, hours: np.ndarray) -> np.ndarray:
+    """Vectorized wrap-around linear interpolation over hourly tables:
+    ``values`` is (24,) or (M, 24), ``hours`` (S,); returns (S,) resp.
+    (M, S). THE single definition of :meth:`IntensityTrace.at`'s
+    arithmetic — the batched provider API interpolates through this same
+    function, keeping batch == scalar bit-identical (sim determinism
+    depends on it)."""
+    h = np.asarray(hours, dtype=float) % 24.0
+    i = np.floor(h).astype(np.int64) % 24
+    j = (i + 1) % 24
+    frac = h - np.floor(h)
+    v = np.asarray(values)
+    return v[..., i] * (1 - frac) + v[..., j] * frac
 
 
 @dataclass(frozen=True)
@@ -41,12 +56,18 @@ class IntensityTrace:
     region: str
     values: Tuple[float, ...]              # length 24 (wraps)
 
-    def at(self, hour: float) -> float:
-        h = hour % 24.0
-        i = int(h) % 24
-        j = (i + 1) % 24
-        frac = h - int(h)
-        return self.values[i] * (1 - frac) + self.values[j] * frac
+    def at(self, hour):
+        """Linear interpolation at ``hour`` (wraps over 24 h). Accepts a
+        scalar (returns float) or an array of hours (returns an array) —
+        the array form backs the batched provider API and evaluates the
+        exact scalar arithmetic elementwise (bit-identical)."""
+        if np.ndim(hour) == 0:
+            h = hour % 24.0
+            i = int(h) % 24
+            j = (i + 1) % 24
+            frac = h - int(h)
+            return self.values[i] * (1 - frac) + self.values[j] * frac
+        return interp_hourly(self.values, hour)
 
     @property
     def mean(self) -> float:
@@ -73,31 +94,24 @@ class DeferrableTask(Task):
     duration_hours: float = 0.1
 
 
-def plan_wake(provider, cluster: EdgeCluster, task, now_hour: float,
-              slot_hours: float = 0.5) -> float:
-    """When should a deferrable task wake to minimise expected carbon?
-
-    This is the *driver-routed* deferral path (DESIGN.md §2): instead of
-    the eager slot scan executing a placement immediately
-    (:meth:`TemporalPolicy.place`), the sim driver calls ``plan_wake`` to
-    pick a wake hour, parks the task on a ``DEFER_WAKE`` event, and lets
-    the engine's policy choose the node *at wake time* against the
-    then-current cluster state — so capacity freed (or consumed) between
-    submission and wake is seen, which the eager scan cannot do.
-
-    The wake slot minimises the provider's intensity over the feasible
-    nodes' forecast series within ``[now, now + deadline - duration]``
-    (a :class:`~repro.core.api.ForecastProvider` answers through
-    ``window`` — CarbonCP-style acting-under-forecast; any other provider
-    is sampled per slot). Ties prefer the earliest slot (run now). A task
-    without deadline slack, or with no feasible node, wakes immediately.
-    """
+def _wake_slots(task, slot_hours: float) -> int:
+    """Number of start slots within ``deadline - duration`` (0 = no slack)."""
     deadline = getattr(task, "deadline_hours", 0.0)
     duration = getattr(task, "duration_hours", 0.0)
     horizon = max(deadline - duration, 0.0)
     if horizon <= 0.0:
+        return 0
+    return max(1, int(horizon / slot_hours) + 1)
+
+
+def plan_wake_scalar(provider, cluster: EdgeCluster, task, now_hour: float,
+                     slot_hours: float = 0.5) -> float:
+    """Scalar nodes x slots Python scan — the parity oracle for
+    :func:`plan_wake` (which vectorizes the same decision; the two are
+    regression-tested equal, ties included)."""
+    n_slots = _wake_slots(task, slot_hours)
+    if n_slots == 0:
         return now_hour
-    n_slots = max(1, int(horizon / slot_hours) + 1)
     # half-slot pad so float fuzz in arange never drops/adds a slot
     end = now_hour + (n_slots - 0.5) * slot_hours
     best_slot, best_val = 0, np.inf
@@ -117,6 +131,95 @@ def plan_wake(provider, cluster: EdgeCluster, task, now_hour: float,
         if series[k] < best_val:
             best_val, best_slot = float(series[k]), k
     return now_hour + best_slot * slot_hours
+
+
+def plan_wake(provider, cluster: EdgeCluster, task, now_hour: float,
+              slot_hours: float = 0.5) -> float:
+    """When should a deferrable task wake to minimise expected carbon?
+
+    This is the *driver-routed* deferral path (DESIGN.md §2): instead of
+    the eager slot scan executing a placement immediately
+    (:meth:`TemporalPolicy.place`), the sim driver calls ``plan_wake`` to
+    pick a wake hour, parks the task on a ``DEFER_WAKE`` event, and lets
+    the engine's policy choose the node *at wake time* against the
+    then-current cluster state — so capacity freed (or consumed) between
+    submission and wake is seen, which the eager scan cannot do.
+
+    The wake slot minimises the provider's intensity over the feasible
+    nodes' forecast series within ``[now, now + deadline - duration]``.
+    Ties keep the earliest slot, and across nodes the first (insertion-
+    order) node's earliest minimum wins — identical to the scalar oracle
+    :func:`plan_wake_scalar`. A task without deadline slack, or with no
+    feasible node, wakes immediately.
+
+    Fleet-scale fast path (DESIGN.md §3): feasibility comes from the
+    cluster's incremental :class:`~repro.core.featcache.FeatureCache`
+    columns (duck-typed cluster-likes without one fall back to the scalar
+    feasibility filter) and the whole (S, N) slot grid is one batched
+    :func:`~repro.core.api.intensity_batch` read — no nodes x slots
+    Python loop. Delegates to :func:`plan_wake_batch`.
+    """
+    return float(plan_wake_batch(provider, cluster, [task], now_hour,
+                                 slot_hours)[0])
+
+
+def plan_wake_batch(provider, cluster: EdgeCluster, tasks, now_hour: float,
+                    slot_hours: float = 0.5) -> np.ndarray:
+    """Vectorized :func:`plan_wake` for many tasks at once: one (S, N)
+    intensity grid over the union of the tasks' feasible nodes, then a
+    per-task argmin with the oracle's exact tie-breaks."""
+    T = len(tasks)
+    wakes = np.full(T, now_hour, dtype=float)
+    n_slots = np.array([_wake_slots(t, slot_hours) for t in tasks])
+    todo = np.nonzero(n_slots > 0)[0]
+    if todo.size == 0:
+        return wakes
+    fc = getattr(cluster, "feature_cache", None)
+    if callable(fc):
+        cache = fc()
+        all_names = cache.names
+        task_cpu = np.array([tasks[i].cpu for i in todo], dtype=float)
+        task_mem = np.array([tasks[i].mem_mb for i in todo], dtype=float)
+        feas = cache.feasible(task_cpu, task_mem)        # (T', N)
+    else:
+        # duck-typed cluster-likes without the EdgeCluster cache plumbing:
+        # scalar feasibility, still one batched grid read below
+        all_names = list(cluster.nodes)
+        feas = np.array([[node_feasible(cluster.nodes[n], tasks[i])
+                          for n in all_names] for i in todo])
+    need = feas.any(axis=0)
+    if not need.any():
+        return wakes
+    cols = np.nonzero(need)[0]
+    names = [all_names[j] for j in cols]
+    S = int(n_slots[todo].max())
+    hours = now_hour + np.arange(S) * slot_hours
+    # One batched read for the whole grid. A provider exposing only the
+    # legacy ``window`` protocol (and no intensity_batch) keeps its
+    # per-node window path so series values stay bit-identical.
+    if (not hasattr(provider, "intensity_batch")
+            and hasattr(provider, "window")):
+        end = now_hour + (S - 0.5) * slot_hours
+        grid = np.full((S, len(names)), np.inf)
+        for j, name in enumerate(names):
+            series = np.asarray(provider.window(name, now_hour, end,
+                                                slot_hours))[:S]
+            grid[:series.size, j] = series
+    else:
+        grid = np.asarray(intensity_batch(provider, names, hours))
+    grid = grid.reshape(S, len(names))
+    # Per-node earliest argmin over its slots, then first node with the
+    # strictly smallest value — the scalar oracle's exact tie-breaks.
+    for row, ti in enumerate(todo):
+        s = int(n_slots[ti])
+        sub = grid[:s, :]
+        m = np.where(feas[row, cols], sub.min(axis=0), np.inf)
+        if not np.isfinite(m).any():
+            continue
+        j = int(np.argmin(m))
+        k = int(np.argmin(sub[:, j]))
+        wakes[ti] = now_hour + k * slot_hours
+    return wakes
 
 
 class TemporalScheduler:

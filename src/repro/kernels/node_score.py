@@ -18,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -26,9 +27,10 @@ from repro import compat
 NEG_INF = -1e30
 
 
-def _kernel(f_ref, w_ref, s_ref):
-    f = f_ref[...]                                 # (bn, 8)
-    w = w_ref[...]                                 # (1, 8)
+def _eq3_tile_scores(f, w):
+    """(bn, 8) feature tile x (1, 8) weights -> (bn,) masked total scores.
+    The single in-kernel statement of the Eq. 3/4 component math, shared by
+    the score-emitting and the fused select kernels."""
     s_r = 0.5 * jnp.minimum(f[:, 0], 1.0) + 0.5 * jnp.minimum(f[:, 1], 1.0)
     s_l = 1.0 - f[:, 2]
     s_p = 1.0 / (1.0 + f[:, 3])
@@ -37,7 +39,13 @@ def _kernel(f_ref, w_ref, s_ref):
     total = (w[0, 0] * s_r + w[0, 1] * s_l + w[0, 2] * s_p
              + w[0, 3] * s_b + w[0, 4] * s_c)
     valid = f[:, 6] > 0.5
-    s_ref[...] = jnp.where(valid, total, NEG_INF)[:, None]
+    return jnp.where(valid, total, NEG_INF)
+
+
+def _kernel(f_ref, w_ref, s_ref):
+    f = f_ref[...]                                 # (bn, 8)
+    w = w_ref[...]                                 # (1, 8)
+    s_ref[...] = _eq3_tile_scores(f, w)[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
@@ -97,5 +105,134 @@ def node_scores_batched(features, weights, *, bn: int = 1024,
 
 def select_best_batched(features, weights, *, interpret: bool = False):
     """Fused batched scoring + per-task argmax -> (B,) int32 node indices."""
-    s = node_scores_batched(features, weights, interpret=interpret)
-    return jnp.argmax(s, axis=1).astype(jnp.int32)
+    idx, _ = select_best_fused(features, weights, interpret=interpret)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# Fused score + argmax: reduce to (best_index, best_score) on-chip
+# ---------------------------------------------------------------------------
+
+
+def _select_kernel(f_ref, w_ref, idx_ref, val_ref):
+    """One (1, bn, 8) node tile of one task row: score it, reduce to the
+    tile's (first) max, and fold into the running per-task best across the
+    sequential node-tile grid axis. Emits per-task winner index + score —
+    the (B, N) score matrix never leaves the chip."""
+    j = pl.program_id(1)
+    f = f_ref[0]                                   # (bn, 8)
+    w = w_ref[...]                                 # (1, 8)
+    s = _eq3_tile_scores(f, w)[None, :]            # (1, bn)
+    bn = s.shape[1]
+    tile_max = jnp.max(s, axis=1)                             # (1,)
+    # first-max index via 2D iota (TPU requires >=2D), np.argmax semantics
+    ii = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    tile_arg = jnp.min(jnp.where(s == tile_max[:, None], ii, bn), axis=1)
+    gidx = (j * bn + tile_arg).astype(jnp.int32)              # (1,)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = tile_max[:, None]
+        idx_ref[...] = gidx[:, None]
+
+    @pl.when(j > 0)
+    def _fold():
+        prev = val_ref[0, 0]
+        # strict > keeps the lowest global index on exact ties
+        better = tile_max[0] > prev
+        val_ref[0, 0] = jnp.where(better, tile_max[0], prev)
+        idx_ref[0, 0] = jnp.where(better, gidx[0], idx_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def select_best_fused(features, weights, *, bn: int = 1024,
+                      interpret: bool = False):
+    """features: (B, N, 8) f32; weights: (8,) f32 ->
+    ((B,) int32 best index, (B,) f32 best score).
+
+    One pallas_call tiling the node axis: each tile reduces to its local
+    (max, first-argmax) and folds into the per-task running best across
+    the sequential tile axis, so only 2*B scalars ship to host instead of
+    a (B, N) score matrix. N is padded to a multiple of bn (padding rows
+    invalid -> NEG_INF, never selected while any real node is feasible).
+    Callers that want a bounded jit cache should pad (B, N) to shape
+    buckets first (VectorizedPolicy does).
+    """
+    B, n0, _ = features.shape
+    pad = (-n0) % bn
+    if pad:
+        features = jnp.pad(features, ((0, 0), (0, pad), (0, 0)))
+    N = features.shape[1]
+    w2 = weights.reshape(1, 8)
+    idx, val = pl.pallas_call(
+        _select_kernel,
+        grid=(B, N // bn),
+        in_specs=[
+            pl.BlockSpec((1, bn, 8), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 8), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        compiler_params=compat.pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(features, w2)
+    return idx[:, 0], val[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Sharded node axis: N >= 10^5 fleets across devices
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_select_fn(mesh, axis: str, bn: int, interpret: bool):
+    """Build (and cache) the shard_map'd fused select for one mesh: each
+    device scores its node shard with the fused kernel, then a cross-shard
+    argmax combine picks the global winner (lowest global index on ties)."""
+    from repro import compat
+
+    n_shards = mesh.shape[axis]
+
+    def local_select(f_local, w):
+        # f_local: (B, N/d, 8) on this device
+        idx, val = select_best_fused(f_local, w, bn=bn, interpret=interpret)
+        shard = jax.lax.axis_index(axis)
+        gidx = idx + (shard * f_local.shape[1]).astype(jnp.int32)
+        vals = jax.lax.all_gather(val, axis)                   # (d, B)
+        gidxs = jax.lax.all_gather(gidx, axis)                 # (d, B)
+        best_val = jnp.max(vals, axis=0)                       # (B,)
+        # among shards attaining the max, take the lowest global index
+        cand = jnp.where(vals == best_val[None, :], gidxs, jnp.iinfo(jnp.int32).max)
+        return jnp.min(cand, axis=0).astype(jnp.int32), best_val
+
+    from jax.sharding import PartitionSpec as P
+
+    return jax.jit(compat.shard_map(
+        local_select, mesh=mesh,
+        in_specs=(P(None, axis, None), P(None)),
+        out_specs=(P(None), P(None)),
+        check_rep=False))
+
+
+def select_best_sharded(features, weights, mesh=None, axis: str = "nodes",
+                        *, bn: int = 1024, interpret: bool = False):
+    """Fused select with the node axis sharded across devices.
+
+    features: (B, N, 8) f32 with N divisible by the mesh's ``axis`` size
+    (pad with invalid rows first); returns ((B,) int32, (B,) f32) exactly
+    like :func:`select_best_fused`. With ``mesh=None`` builds a 1-D mesh
+    over all local devices.
+    """
+    if mesh is None:
+        from jax.sharding import Mesh
+
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs, (axis,))
+    return _sharded_select_fn(mesh, axis, bn, interpret)(features, weights)

@@ -62,6 +62,20 @@ def select_best_node_batched(features, weights):
     return _ns.select_best_batched(features, weights, interpret=_interpret())
 
 
+def select_best_node_fused(features, weights):
+    """(B, N, 8) x (8,) -> ((B,) int32 best index, (B,) f32 best score):
+    the fused score+argmax kernel — per-task winners reduced on-chip, no
+    (B, N) score matrix shipped to host."""
+    return _ns.select_best_fused(features, weights, interpret=_interpret())
+
+
+def select_best_node_sharded(features, weights, mesh=None, axis="nodes"):
+    """Fused select with the node axis sharded across devices via
+    shard_map (cross-shard argmax combine); see node_score.select_best_sharded."""
+    return _ns.select_best_sharded(features, weights, mesh, axis,
+                                   interpret=_interpret())
+
+
 # Re-export oracles for tests/benchmarks.
 flash_attention_ref = ref.flash_attention_ref
 decode_attention_ref = ref.decode_attention_ref

@@ -6,7 +6,9 @@ executor steps through simulated time:
 - ``ARRIVAL`` events materialise tasks (via ``task_factory``) and enqueue
   them on the executor; deferrable tasks (``deadline_hours > 0``) are
   instead *planned* through :func:`repro.core.temporal.plan_wake` against
-  the driver's forecast provider and parked until their ``DEFER_WAKE``;
+  the driver's forecast provider and parked until their ``DEFER_WAKE``
+  (fleet-scale: the planner reads the whole (slots x nodes) grid in one
+  batched provider call — DESIGN.md §3.6);
 - ``BATCH_READY`` events drain up to ``max_batch`` pending tasks in one
   ``executor.step(now_hour=clock.hour, limit=...)`` call — with the
   default :class:`~repro.core.api.CarbonEdgeEngine` that is one (B, N, 8)
@@ -202,20 +204,36 @@ class AsyncEngineDriver:
     def _on_tick(self, now: float) -> None:
         cluster = getattr(self.executor, "cluster", None)
         provider = getattr(self.executor, "provider", None)
-        vals = []
+        mean_int = 0.0
         if cluster is not None and provider is not None:
-            for name in cluster.nodes:
-                try:
-                    vals.append(provider.intensity(name, now))
-                except KeyError:
-                    pass
+            import numpy as np
+
+            from repro.core.api import intensity_batch
+
+            names = list(cluster.nodes)
+            try:
+                # fleet-scale: one batched provider read per tick, not N
+                # Python calls (DESIGN.md §3.2); the mean stays ndarray math
+                arr = np.asarray(intensity_batch(provider, names, now),
+                                 dtype=float)
+                if arr.size:
+                    mean_int = float(arr.sum() / arr.size)
+            except KeyError:
+                # partial-coverage provider: sample per node, skip holes
+                vals = []
+                for name in names:
+                    try:
+                        vals.append(provider.intensity(name, now))
+                    except KeyError:
+                        pass
+                if vals:
+                    mean_int = float(sum(vals) / len(vals))
         monitor = self._monitor()
         carbon = monitor.total_carbon_g() if monitor is not None else \
             sum(r.carbon_g for r in self.metrics.records)
         self.metrics.add_sample(TimelineSample(
             hour=now, completed=len(self.metrics.records),
-            carbon_g_cum=float(carbon),
-            mean_intensity=float(sum(vals) / len(vals)) if vals else 0.0))
+            carbon_g_cum=float(carbon), mean_intensity=mean_int))
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> MetricsCollector:

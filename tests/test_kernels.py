@@ -160,6 +160,60 @@ def test_select_best_node_batched():
     np.testing.assert_array_equal(best, ref)
 
 
+@pytest.mark.parametrize("B,n", [(5, 300), (1, 7), (3, 1024), (2, 1500)])
+def test_select_best_fused_matches_scores_argmax(B, n):
+    """Fused score+argmax kernel == argmax over the score kernel, with the
+    winner's score returned (the host never sees the (B, N) matrix)."""
+    rng = np.random.default_rng(5)
+    f = np.abs(rng.standard_normal((B, n, 8))).astype(np.float32)
+    f[:, :, 6] = (f[:, :, 6] > 0.3).astype(np.float32)
+    w = np.array([0.2, 0.2, 0.15, 0.15, 0.3, 0, 0, 0], np.float32)
+    idx, val = ops.select_best_node_fused(jnp.asarray(f), jnp.asarray(w))
+    scores = np.asarray(ops.node_scores_batched(jnp.asarray(f), jnp.asarray(w)))
+    ref = np.argmax(scores, axis=1)
+    np.testing.assert_array_equal(np.asarray(idx), ref)
+    np.testing.assert_allclose(np.asarray(val), scores[np.arange(B), ref],
+                               rtol=1e-6)
+
+
+def test_select_best_fused_tie_prefers_lowest_index():
+    """Exact ties must resolve like np.argmax: the lowest node index wins,
+    within a tile and across tiles."""
+    w = np.array([0.2, 0.2, 0.15, 0.15, 0.3, 0, 0, 0], np.float32)
+    f = np.zeros((1, 2048, 8), np.float32)
+    f[:, :, 6] = 1.0
+    for a, b in [(700, 1900), (3, 4), (1024, 1025)]:   # cross/in-tile ties
+        ft = f.copy()
+        ft[0, a] = ft[0, b] = [2, 2, 0, 0, 0, 0, 1, 0]
+        idx, _ = ops.select_best_node_fused(jnp.asarray(ft), jnp.asarray(w))
+        assert int(idx[0]) == a, (a, b, int(idx[0]))
+
+
+def test_select_best_fused_all_invalid():
+    w = np.array([0.2, 0.2, 0.15, 0.15, 0.3, 0, 0, 0], np.float32)
+    f = np.abs(np.random.default_rng(6).standard_normal((2, 64, 8))
+               ).astype(np.float32)
+    f[:, :, 6] = 0.0
+    idx, val = ops.select_best_node_fused(jnp.asarray(f), jnp.asarray(w))
+    assert np.all(np.asarray(val) < -1e29)     # NEG_INF sentinel: no winner
+
+
+def test_select_best_sharded_single_device():
+    """Degenerate 1-device mesh: the cross-shard combine must reduce to the
+    fused kernel's answer."""
+    from repro.kernels import node_score as ns
+
+    rng = np.random.default_rng(7)
+    f = np.abs(rng.standard_normal((3, 512, 8))).astype(np.float32)
+    f[:, :, 6] = (f[:, :, 6] > 0.3).astype(np.float32)
+    w = np.array([0.2, 0.2, 0.15, 0.15, 0.3, 0, 0, 0], np.float32)
+    si, sv = ns.select_best_sharded(jnp.asarray(f), jnp.asarray(w),
+                                    interpret=True)
+    ri, rv = ops.select_best_node_fused(jnp.asarray(f), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(rv), rtol=1e-6)
+
+
 def test_select_best_node():
     rng = np.random.default_rng(2)
     f = np.abs(rng.standard_normal((1000, 8))).astype(np.float32)

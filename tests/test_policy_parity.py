@@ -149,3 +149,48 @@ def test_select_batch_matches_select():
     singles = [NUMPY.select(c, t, w) for t in tasks]
     assert batch == singles
     assert batch == ORACLE.select_batch(c, tasks, w)
+
+
+def test_pallas_compile_count_bounded_across_fleet_sizes():
+    """Regression (ISSUE 3 satellite): the Pallas scorer pads (B, N) to
+    power-of-two shape buckets, so a sweep over many distinct fleet/batch
+    sizes may only add as many jit entries as there are distinct buckets —
+    not one per (B, N)."""
+    from repro.kernels import node_score as ns
+
+    pol = VectorizedPolicy(backend="pallas")
+    sweep = [(1, 3), (2, 5), (3, 9), (2, 17), (4, 33), (1, 40),
+             (5, 65), (2, 100), (3, 129), (1, 200)]
+    buckets = set()
+    rng = np.random.default_rng(0)
+    baseline = ns.select_best_fused._cache_size()
+    for b, n in sweep:
+        c = random_cluster(rng, n)
+        tasks = [random_task(rng) for _ in range(b)]
+        pol.select_batch(c, tasks, MODES["green"])
+        buckets.add((pol._bucket(len({(t.cpu, t.mem_mb) for t in tasks})),
+                     pol._bucket(n)))
+    grown = ns.select_best_fused._cache_size() - baseline
+    assert grown <= len(buckets), (grown, sorted(buckets))
+    assert len(buckets) < len(sweep)           # bucketing actually coalesces
+
+
+def test_cached_column_path_matches_fresh_at_fleet_scale():
+    """The large-N column-scoring fast path (different summation order)
+    must agree with the fresh-featurize oracle modulo exact score ties."""
+    rng = np.random.default_rng(23)
+    n = 5000                                   # above COLUMN_PATH_MIN_N
+    c = random_cluster(rng, n)
+    tasks = [random_task(rng) for _ in range(6)]
+    fresh = VectorizedPolicy(backend="numpy", use_cache=False)
+    cached = VectorizedPolicy(backend="numpy", use_cache=True)
+    assert n >= cached.COLUMN_PATH_MIN_N
+    for mode in ("green", "performance"):
+        w = MODES[mode]
+        a = fresh.select_batch(c, tasks, w)
+        b = cached.select_batch(c, tasks, w)
+        for task, x, y in zip(tasks, a, b):
+            if x != y:                         # only on an exact float tie
+                assert x is not None and y is not None
+                assert abs(oracle_score(c, task, w, x)
+                           - oracle_score(c, task, w, y)) < 1e-12

@@ -274,6 +274,141 @@ def test_plan_wake_window_matches_sampled():
 
 
 # ---------------------------------------------------------------------------
+# Batched plan_wake vs the scalar oracle (ISSUE 3 satellite)
+# ---------------------------------------------------------------------------
+
+
+def _random_wake_cluster(rng, n):
+    from tests.test_policy_parity import random_cluster
+
+    c = random_cluster(rng, n)
+    for st in c.nodes.values():             # keep a good share feasible
+        st.load = float(rng.uniform(0.0, 0.9))
+    return c
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_plan_wake_batched_matches_scalar_randomized(seed):
+    """plan_wake (batched (S, N) grid) == plan_wake_scalar (nodes x slots
+    Python loop) on randomized fleets, providers and deadlines — exact
+    equality, ties included."""
+    from repro.core.temporal import plan_wake_scalar
+
+    rng = np.random.default_rng(seed)
+    c = _random_wake_cluster(rng, int(rng.integers(2, 16)))
+    names = list(c.nodes)
+    traces = {n: synthetic_trace(n, float(rng.uniform(100.0, 900.0)),
+                                 seed=int(rng.integers(0, 100)))
+              for n in names[:int(rng.integers(1, len(names) + 1))]}
+    provider = TraceProvider(traces, fallback=StaticProvider.from_cluster(c))
+    if seed % 3 == 1:
+        provider = ForecastProvider(provider, lead_hours=0.5,
+                                    smoothing_hours=1.0)
+    elif seed % 3 == 2:
+        provider = StaticProvider.from_cluster(c)   # constant: full tie
+    t = DeferrableTask(cpu=float(rng.uniform(0.01, 0.5)),
+                       mem_mb=float(rng.uniform(4.0, 64.0)),
+                       deadline_hours=float(rng.uniform(0.0, 30.0)),
+                       duration_hours=float(rng.uniform(0.0, 2.0)))
+    now = float(rng.uniform(0.0, 24.0))
+    assert plan_wake(provider, c, t, now) == \
+        plan_wake_scalar(provider, c, t, now)
+
+
+def test_plan_wake_tie_breaks_earliest_slot_first_node():
+    """Exact ties: a constant signal must wake immediately (earliest
+    slot), and when two nodes share the minimum the first (insertion
+    order) node's earliest minimum slot must win."""
+    from repro.core.temporal import IntensityTrace, plan_wake_scalar
+
+    c = fresh_cluster()
+    t = DeferrableTask(cpu=0.05, mem_mb=16.0, deadline_hours=6.0,
+                       duration_hours=0.5)
+    # constant everywhere -> every (slot, node) ties -> run now
+    const = StaticProvider.from_cluster(c)
+    assert plan_wake(const, c, t, 3.0) == 3.0
+    # node-high (first) has its min at slot 4, node-medium the same min
+    # value at slot 2: the scalar oracle keeps the FIRST node's slot.
+    vals_high = [500.0] * 24
+    vals_high[5] = 100.0                      # 3.0 + 4*0.5 = hour 5
+    vals_med = [500.0] * 24
+    vals_med[4] = 100.0                       # 3.0 + 2*0.5 = hour 4
+    provider = TraceProvider({
+        "node-high": IntensityTrace("a", tuple(vals_high)),
+        "node-medium": IntensityTrace("b", tuple(vals_med)),
+        "node-green": IntensityTrace("c", (500.0,) * 24),
+    })
+    want = plan_wake_scalar(provider, c, t, 3.0)
+    assert want == 5.0                        # first node's earliest min
+    assert plan_wake(provider, c, t, 3.0) == want
+
+
+def test_plan_wake_duck_typed_cluster():
+    """A cluster-like with .nodes but no feature_cache plumbing (custom
+    executors) must still plan — via the scalar feasibility fallback."""
+    from repro.core.temporal import plan_wake_scalar
+
+    real = fresh_cluster()
+
+    class DuckCluster:
+        nodes = real.nodes
+
+    provider = TraceProvider(duck_traces())
+    t = DeferrableTask(cpu=0.05, mem_mb=16.0, deadline_hours=24.0,
+                       duration_hours=0.25)
+    assert plan_wake(provider, DuckCluster(), t, 17.0) == \
+        plan_wake_scalar(provider, real, t, 17.0)
+
+
+def test_fallback_provider_batch_splits_by_coverage():
+    """FallbackProvider with a partial-coverage primary resolves the batch
+    with covers()-split batched calls — values must equal the scalar path."""
+    from repro.core.api import FallbackProvider, intensity_batch
+
+    c = fresh_cluster()
+    primary = TraceProvider({"node-green": duck_traces()["node-green"]})
+    provider = FallbackProvider(primary, StaticProvider.from_cluster(c))
+    names = list(c.nodes)
+    hours = np.array([0.0, 6.5, 13.0])
+    grid = intensity_batch(provider, names, hours)
+    for s, hr in enumerate(hours):
+        for j, n in enumerate(names):
+            assert grid[s, j] == provider.intensity(n, float(hr)), (n, hr)
+
+
+def test_plan_wake_batch_matches_per_task():
+    from repro.core.temporal import plan_wake_batch
+
+    rng = np.random.default_rng(3)
+    c = _random_wake_cluster(rng, 6)
+    provider = TraceProvider(
+        {n: synthetic_trace(n, 400.0 + 50.0 * i, seed=i)
+         for i, n in enumerate(c.nodes)})
+    tasks = [DeferrableTask(cpu=float(rng.uniform(0.01, 0.4)),
+                            mem_mb=8.0,
+                            deadline_hours=float(rng.uniform(0.0, 20.0)),
+                            duration_hours=0.25)
+             for _ in range(7)]
+    batch = plan_wake_batch(provider, c, tasks, 17.0)
+    singles = [plan_wake(provider, c, t, 17.0) for t in tasks]
+    np.testing.assert_array_equal(batch, singles)
+
+
+def test_sim_determinism_byte_identical_with_batched_plan_wake(monkeypatch):
+    """The batched planner must preserve the sim determinism contract:
+    to_text() byte-identical to a run forced through the scalar oracle."""
+    import repro.core.temporal as temporal_mod
+
+    text_batched = deferral_run(
+        ForecastProvider(TraceProvider(duck_traces()))).to_text()
+    monkeypatch.setattr(temporal_mod, "plan_wake",
+                        temporal_mod.plan_wake_scalar)
+    text_scalar = deferral_run(
+        ForecastProvider(TraceProvider(duck_traces()))).to_text()
+    assert text_batched == text_scalar
+
+
+# ---------------------------------------------------------------------------
 # Engine run_until / peek / partial drain
 # ---------------------------------------------------------------------------
 
