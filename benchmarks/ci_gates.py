@@ -1,0 +1,187 @@
+"""CI gate assertions, runnable locally with the exact checks CI uses.
+
+Each gate that the workflow (.github/workflows/ci.yml) runs is a plain
+function here, so a red CI can be reproduced and debugged from a checkout:
+
+    PYTHONPATH=src:. python -m benchmarks.ci_gates            # all gates
+    PYTHONPATH=src:. python -m benchmarks.ci_gates overhead
+    PYTHONPATH=src:. python -m benchmarks.ci_gates fleet
+    PYTHONPATH=src:. python -m benchmarks.ci_gates sim
+    PYTHONPATH=src:. python -m benchmarks.ci_gates trend --baseline PREV.json
+
+(or ``python -m benchmarks.run --gate NAME`` — same registry.)
+
+Gates:
+
+- **overhead** — scalar oracle under a generous CPU bound; batched engine
+  selection AND the end-to-end step (select + execute + bill, DESIGN.md
+  §6) under the paper's 0.03 ms/task budget; batched paths faster than
+  the per-task loops they replaced.
+- **fleet** — reduced fleet-scale sweep: cached selection >3x over the
+  rebuild-everything oracle (>2x headroom on the relative gate, immune to
+  runner hardware), loose absolute backstop, batched plan_wake >3x, and
+  the end-to-end batched step >2x over the per-task execute loop.
+- **sim** — fixed-seed sim is byte-deterministic, green mode beats
+  performance mode under load, accurate-forecast deferral beats run-now,
+  forecast error degrades savings monotonically, static-scenario parity.
+- **trend** — compare this checkout's fleet-scale end-to-end per-task
+  times against a previous run's ``BENCH_fleet_scale.json`` (CI restores
+  the last main-branch run via actions/cache) and fail on a >2x relative
+  regression on any matching row.
+
+Each gate returns the measured payload so callers can log it; failures
+raise ``AssertionError`` with the offending row attached.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, Optional
+
+# Trend gate: fail when a matching row got more than this factor slower.
+TREND_MAX_SLOWDOWN_X = 2.0
+
+
+def gate_overhead() -> Dict:
+    from benchmarks import overhead
+
+    out = overhead.run()
+    assert out["per_task_ms"] < 0.5, out
+    assert out["route_select_ms"] < 0.1, out
+    assert out["engine_batch256_per_task_ms"] < 0.03, out
+    assert out["engine_batch256_per_task_ms"] < out["per_task_ms"], \
+        "batched engine selection slower than the scalar loop"
+    # end-to-end: the WHOLE step (select + execute + bill) inside the
+    # paper's 0.03 ms/task budget, and no slower than the per-task
+    # execute loop it replaced
+    assert out["engine_step_e2e_per_task_ms"] < 0.03, out
+    assert (out["engine_step_e2e_per_task_ms"]
+            <= out["engine_step_scalar_exec_per_task_ms"]), \
+        "batched execution slower than the per-task execute loop"
+    return out
+
+
+def gate_fleet(out_path: str = "BENCH_fleet_scale.json") -> Dict:
+    from benchmarks import fleet_scale
+
+    out = fleet_scale.run(smoke=True, out_path=out_path)
+    for r in out["select"]:
+        assert r["speedup_x"] > 3.0, r
+        assert r["cached_per_task_ms"] < 0.5, r
+    for r in out["plan_wake"]:
+        assert r["speedup_x"] > 3.0, r
+    for r in out["step"]:
+        # end-to-end batched step vs the per-task execute loop: relative
+        # gate at smoke scale (measured ~3-4x at N=2048, B=256; the >=5x
+        # acceptance number is the full-sweep N=10^4, B=1024 row)
+        assert r["speedup_x"] > 2.0, r
+        assert r["batched_per_task_ms"] < 0.5, r
+    return out
+
+
+def gate_sim() -> Dict:
+    from benchmarks import sim_serving
+
+    a = sim_serving.run()
+    b = sim_serving.run()
+    for x, y in zip(a["deferral"], b["deferral"]):
+        assert x["carbon_g_total"] == y["carbon_g_total"], (x, y)
+    ra, rb = a["rate_mode"], b["rate_mode"]
+    assert [r["wait_histogram"] for r in ra] == \
+        [r["wait_histogram"] for r in rb], "wait histogram not deterministic"
+    green = [r for r in ra if r["mode"] == "green"]
+    perf = [r for r in ra if r["mode"] == "performance"]
+    for g, p in zip(green, perf):
+        assert g["carbon_g_per_task"] < p["carbon_g_per_task"], (g, p)
+    run_now = a["deferral"][0]["carbon_g_total"]
+    regrets = [r["regret_g"] for r in a["deferral"][1:]]
+    assert a["deferral"][1]["carbon_g_total"] < run_now, \
+        "deferral lost to run-now"
+    assert all(x <= y + 1e-12 for x, y in zip(regrets, regrets[1:])), regrets
+    assert a["parity"]["carbon_match"] and \
+        a["parity"]["distribution_match"], a["parity"]
+    return a
+
+
+def _trend_rows(bench: Dict) -> Dict[tuple, float]:
+    """(section, n_nodes, batch) -> per-task ms for the rows the trend
+    gate tracks: cached selection and the end-to-end batched step."""
+    rows = {}
+    for r in bench.get("select", []):
+        rows[("select", r["n_nodes"], r["batch"])] = r["cached_per_task_ms"]
+    for r in bench.get("step", []):
+        rows[("step", r["n_nodes"], r["batch"])] = r["batched_per_task_ms"]
+    return rows
+
+
+def gate_trend(baseline: Optional[str] = None,
+               current: str = "BENCH_fleet_scale.json") -> Dict:
+    """Relative regression gate against a previous run's bench JSON.
+
+    Passes (with a notice) when there is no baseline yet — the first run
+    on a fresh cache has nothing to compare against — and when the
+    baseline has no matching rows (sweep shape changed)."""
+    if baseline is None or not os.path.exists(baseline):
+        print(f"trend: no baseline at {baseline!r}; nothing to compare")
+        return {"compared": 0}
+    with open(baseline) as f:
+        base = _trend_rows(json.load(f))
+    if not os.path.exists(current):
+        # gate_fleet writes it; standalone trend runs may need to
+        gate_fleet(out_path=current)
+    with open(current) as f:
+        cur = _trend_rows(json.load(f))
+    compared, failures = 0, []
+    for key, base_ms in base.items():
+        cur_ms = cur.get(key)
+        if cur_ms is None or base_ms <= 0:
+            continue
+        compared += 1
+        ratio = cur_ms / base_ms
+        print(f"trend {key}: {base_ms*1e3:8.2f} -> {cur_ms*1e3:8.2f} us/task"
+              f"  ({ratio:.2f}x)")
+        if ratio > TREND_MAX_SLOWDOWN_X:
+            failures.append((key, base_ms, cur_ms, ratio))
+    assert not failures, (
+        f">{TREND_MAX_SLOWDOWN_X:.1f}x per-task regression vs baseline: "
+        f"{failures}")
+    if not compared:
+        print("trend: baseline had no matching rows; nothing to compare")
+    return {"compared": compared}
+
+
+GATES: Dict[str, Callable] = {
+    "overhead": gate_overhead,
+    "fleet": gate_fleet,
+    "sim": gate_sim,
+    "trend": gate_trend,
+}
+
+
+def main(gate: str = "all", baseline: Optional[str] = None) -> Dict:
+    """Run one gate (or all) with the exact assertions CI uses."""
+    names = list(GATES) if gate == "all" else [gate]
+    results = {}
+    for name in names:
+        if name not in GATES:
+            raise SystemExit(
+                f"unknown gate {name!r}; choose from {sorted(GATES)} or 'all'")
+        print(f"== gate: {name} ==")
+        if name == "trend":
+            results[name] = gate_trend(baseline=baseline)
+        else:
+            results[name] = GATES[name]()
+        print(f"== gate {name}: PASS ==")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("gate", nargs="?", default="all",
+                   help=f"one of {sorted(GATES)} or 'all' (default)")
+    p.add_argument("--baseline", default=None,
+                   help="previous BENCH_fleet_scale.json for the trend gate")
+    args = p.parse_args()
+    main(gate=args.gate, baseline=args.baseline)

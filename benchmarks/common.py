@@ -13,10 +13,7 @@ Derived calibration (paper Table II/IV monolithic rows, I=530 gCO2/kWh):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
 from typing import Dict
-
-import numpy as np
 
 from repro.configs.cnn_zoo import get_cnn_config
 from repro.core.api import CarbonEdgeEngine

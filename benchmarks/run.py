@@ -3,6 +3,9 @@
 
 ``us_per_call`` is the per-inference (or per-task) latency of the measured
 configuration; ``derived`` is that table's headline metric vs the paper.
+
+``--gate NAME`` instead runs a CI gate (benchmarks/ci_gates.py) with the
+exact assertions the workflow uses — see ``python -m benchmarks.ci_gates``.
 """
 from __future__ import annotations
 
@@ -53,6 +56,10 @@ def main() -> None:
     rows.append((f"fleet_scale_plan_wake_{wk['n_nodes']}n",
                  wk["batched_ms"] * 1e3,
                  f"speedup_vs_scalar_x={wk['speedup_x']:.0f}"))
+    se = max(fs["step"], key=lambda r: (r["n_nodes"], r["batch"]))
+    rows.append((f"fleet_scale_step_e2e_{se['n_nodes']}n_{se['batch']}b",
+                 se["batched_per_task_ms"] * 1e3,
+                 f"speedup_vs_task_loop_x={se['speedup_x']:.1f}"))
 
     ts = temporal_shifting.run(deadlines=(16.0,))
     rows.append(("beyond_paper_temporal_shifting", 0.0,
@@ -82,4 +89,19 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    parser = argparse.ArgumentParser(description="benchmark / CI gate driver")
+    parser.add_argument("--gate", default=None,
+                        help="run a CI gate from benchmarks.ci_gates "
+                             "('overhead', 'fleet', 'sim', 'trend', 'all') "
+                             "instead of the benchmark CSV")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline BENCH_fleet_scale.json for --gate trend")
+    cli = parser.parse_args()
+    if cli.gate is not None:
+        from benchmarks import ci_gates
+
+        ci_gates.main(gate=cli.gate, baseline=cli.baseline)
+    else:
+        main()

@@ -7,7 +7,7 @@ they are hashable and usable as jit static args.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -180,8 +180,8 @@ class ModelConfig:
 
         return dataclasses.replace(
             self,
-            pattern=tuple(w(l) for l in self.pattern),
-            suffix=tuple(w(l) for l in self.suffix),
+            pattern=tuple(w(ld) for ld in self.pattern),
+            suffix=tuple(w(ld) for ld in self.suffix),
         )
 
     # -- parameter counting (analytic; used by partitioner & roofline) ----

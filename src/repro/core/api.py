@@ -338,8 +338,13 @@ class CarbonEdgeEngine:
                  policy: Optional[SchedulingPolicy] = None,
                  provider: Optional[CarbonIntensityProvider] = None,
                  monitor: Optional[CarbonMonitor] = None,
-                 batch_size: Optional[int] = None):
+                 batch_size: Optional[int] = None,
+                 batch_execute: bool = True):
         self.cluster = cluster
+        # Batched execute+billing fast path (DESIGN.md §6), on by default;
+        # False forces the per-task loop — the bit-exact parity oracle
+        # (same pattern as featurize vs featurize_cached).
+        self.batch_execute = batch_execute
         self.weights = weights if weights is not None else MODES[mode]
         self.provider = provider or StaticProvider.from_cluster(cluster)
         if policy is None:
@@ -407,28 +412,10 @@ class CarbonEdgeEngine:
             choices = self.policy.select_batch(
                 self.cluster, batch, self.weights, provider=self.provider,
                 now_hour=now_hour)
-            for task, node in zip(batch, choices):
-                if node is None:
-                    # Already-executed results travel on the exception; the
-                    # infeasible task and the tail are requeued below.
-                    raise NoFeasibleNodeError(results)
-                st = self.cluster.nodes[node]
-                # Resolve every billing input BEFORE executing, so a
-                # provider/monitor lookup failure cannot leave a task
-                # executed in the cluster ledger yet requeued for a retry
-                # (which would double-execute it).
-                exec_intensity = self.provider.intensity(node, now_hour)
-                self.monitor.billing_intensity(node, now_hour)
-                st.running += 1
-                try:
-                    res = self.cluster.execute(
-                        node, task.base_latency_ms, distributed=True,
-                        intensity=exec_intensity)
-                finally:
-                    st.running -= 1
-                self.monitor.record_energy(node, res.energy_kwh,
-                                           hour=now_hour)
-                results.append(res)
+            if self.batch_execute:
+                self._execute_batched(batch, choices, now_hour, results)
+            else:
+                self._execute_scalar(batch, choices, now_hour, results)
         except BaseException:
             # On ANY failure (infeasible node, provider KeyError, execution
             # error) put everything not successfully executed back at the
@@ -436,6 +423,133 @@ class CarbonEdgeEngine:
             self.queue = list(batch[len(results):]) + self.queue
             raise
         return results
+
+    def _execute_scalar(self, batch: Sequence[Task],
+                        choices: Sequence[Optional[str]], now_hour: float,
+                        results: List[TaskResult]) -> None:
+        """Per-task execute+bill loop — the parity oracle the batched path
+        is bit-identical to (cluster/monitor ledgers, log, requeue state)."""
+        for task, node in zip(batch, choices):
+            if node is None:
+                # Already-executed results travel on the exception; the
+                # infeasible task and the tail are requeued by step().
+                raise NoFeasibleNodeError(results)
+            st = self.cluster.nodes[node]
+            # Resolve every billing input BEFORE executing, so a
+            # provider/monitor lookup failure cannot leave a task
+            # executed in the cluster ledger yet requeued for a retry
+            # (which would double-execute it).
+            exec_intensity = self.provider.intensity(node, now_hour)
+            self.monitor.billing_intensity(node, now_hour)
+            st.running += 1
+            try:
+                res = self.cluster.execute(
+                    node, task.base_latency_ms, distributed=True,
+                    intensity=exec_intensity)
+            finally:
+                st.running -= 1
+            self.monitor.record_energy(node, res.energy_kwh,
+                                       hour=now_hour)
+            results.append(res)
+
+    def _probe_intensities(self, nodes: Sequence[str], now_hour: float):
+        """Scalar-order resolution fallback: probe node-by-node *in first-
+        appearance order* so a failure cuts the batch at exactly the task
+        the scalar loop would have failed on. Returns
+        ``(exec_int, bill_int, n_ok, error)``: dicts covering the nodes of
+        the first ``n_ok`` tasks, plus the captured per-node exception."""
+        exec_int, bill_int = {}, {}
+        for i, n in enumerate(nodes):
+            if n in exec_int:
+                continue
+            try:
+                # exactly the scalar loop's resolution order: node lookup,
+                # provider read, monitor billing probe
+                self.cluster.nodes[n]
+                ei = self.provider.intensity(n, now_hour)
+                bi = self.monitor.billing_intensity(n, now_hour)
+            except Exception as err:
+                return exec_int, bill_int, i, err
+            exec_int[n] = ei
+            bill_int[n] = bi
+        return exec_int, bill_int, len(nodes), None
+
+    def _execute_batched(self, batch: Sequence[Task],
+                         choices: Sequence[Optional[str]], now_hour: float,
+                         results: List[TaskResult]) -> None:
+        """Vectorized execute+bill (DESIGN.md §6): one
+        ``cluster.execute_batch`` + one ``monitor.record_energy_batch`` for
+        the feasible prefix — O(distinct nodes) Python work per step
+        instead of O(B) — preserving the scalar loop's mid-batch failure
+        semantics: tasks before the first infeasible/unresolvable one are
+        executed and billed, the rest requeue via step()'s handler.
+
+        Every billing input resolves BEFORE anything executes (the scalar
+        loop's commit rule): execution intensity through one batched
+        provider read over the distinct chosen nodes, billing intensity
+        through one ``monitor.billing_intensity_batch`` — degrading to the
+        per-node probe (``_probe_intensities``) when any node is unknown
+        or uncovered, so the failing task index matches the scalar loop's.
+        """
+        # Cut at the first infeasible task: the scalar loop executes
+        # everything before it, then raises with those results attached.
+        try:
+            cut = choices.index(None)
+            failure = NoFeasibleNodeError(results)
+        except ValueError:
+            cut, failure = len(batch), None
+        nodes = list(choices[:cut])
+        groups = ev = bv = None
+        if nodes:
+            groups = np.unique(np.asarray(nodes, dtype=object),
+                               return_inverse=True)
+            uniq, inverse = groups
+            try:
+                for n in uniq:
+                    if n not in self.cluster.nodes:
+                        raise KeyError(n)
+                ev = np.asarray(intensity_batch(self.provider, list(uniq),
+                                                now_hour), dtype=float)
+                bv = self.monitor.billing_intensity_batch(list(uniq),
+                                                          now_hour)
+            except Exception:
+                exec_int, bill_int, n_ok, err = self._probe_intensities(
+                    nodes, now_hour)
+                if err is None:
+                    # batch read failed but every per-node probe succeeded
+                    # (inconsistent custom provider): use the probed values
+                    ev = np.array([exec_int[n] for n in uniq], dtype=float)
+                    bv = np.array([bill_int[n] for n in uniq], dtype=float)
+                else:
+                    cut, failure = n_ok, err
+                    nodes = nodes[:cut]
+                    if nodes:
+                        groups = np.unique(np.asarray(nodes, dtype=object),
+                                           return_inverse=True)
+                        uniq, inverse = groups
+                        ev = np.array([exec_int[n] for n in uniq],
+                                      dtype=float)
+                        bv = np.array([bill_int[n] for n in uniq],
+                                      dtype=float)
+        if nodes:
+            base = np.array([t.base_latency_ms for t in batch[:cut]],
+                            dtype=float)
+            res = self.cluster.execute_batch(nodes, base, distributed=True,
+                                             intensities=ev[inverse],
+                                             groups=groups)
+            # The billed energy is recomputed through the cluster's own
+            # cost model (the same call execute_batch makes) rather than
+            # gathered back out of the B result objects — same floats, no
+            # O(B) attribute reads, one source of truth for the math.
+            _, e_kwh = self.cluster.latency_energy(base, distributed=True)
+            self.monitor.record_energy_batch(
+                nodes, e_kwh, hour=now_hour, intensities=bv[inverse],
+                groups=groups)
+            results.extend(res)
+        if failure is not None:
+            # `results` is the shared list step() requeues against, so the
+            # exception's executed-prefix view matches the scalar loop's.
+            raise failure
 
     def run(self, tasks: Optional[Sequence[Task]] = None, *,
             task: Optional[Task] = None, iterations: int = 1,

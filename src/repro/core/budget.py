@@ -10,11 +10,11 @@ before being throttled.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 from repro.core.energy import RooflineTerms
-from repro.core.router import GreenRouter, PodSpec
+from repro.core.router import GreenRouter
 from repro.core.scheduler import MODES, Task
 
 

@@ -12,8 +12,10 @@ Tracks energy (Eq. 1: E = ∫ P dt, discretised) and emissions
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core import energy as energy_mod
 from repro.core.energy import RooflineTerms
@@ -92,6 +94,72 @@ class CarbonMonitor:
         if self.provider is not None and not acc.pinned:
             return self.provider.intensity(region, hour)
         return acc.intensity_g_per_kwh
+
+    def billing_intensity_batch(self, regions: Sequence[str],
+                                hour: float = 0.0) -> np.ndarray:
+        """(len(regions),) billing intensities at ``hour`` — the batched,
+        side-effect-free form of :meth:`billing_intensity` (DESIGN.md §6).
+        Provider-driven (non-pinned) regions are resolved through one
+        ``api.intensity_batch`` call instead of a per-region Python loop;
+        pinned or provider-less regions read their registered value. An
+        unregistered region raises ``KeyError`` like the scalar probe."""
+        accs = [self.regions[r] for r in regions]     # KeyError like scalar
+        out = np.array([a.intensity_g_per_kwh for a in accs], dtype=float)
+        if self.provider is not None:
+            live = [i for i, a in enumerate(accs) if not a.pinned]
+            if live:
+                from repro.core.api import intensity_batch
+
+                vals = intensity_batch(self.provider,
+                                       [regions[i] for i in live], hour)
+                out[live] = np.asarray(vals, dtype=float)
+        return out
+
+    def record_energy_batch(self, regions: Sequence[str], e_kwh,
+                            hour: float = 0.0, intensities=None,
+                            groups=None) -> np.ndarray:
+        """Bill B pre-computed task energies in one shot (DESIGN.md §6):
+        the batched form of B :meth:`record_energy` calls.
+
+        ``regions`` is the per-task billing region, ``e_kwh`` a scalar or
+        (B,) array. ``intensities`` (scalar or (B,) array) supplies
+        pre-resolved billing intensities — the engine passes the values it
+        probed before executing, so the billed signal is exactly the probed
+        one; ``None`` resolves them here via
+        :meth:`billing_intensity_batch`. Carbon is one array-valued
+        ``energy.carbon_g`` evaluation, and each region's account is
+        updated once, with float accumulations folded in strict task order
+        (``energy.ledger_add``) — bit-identical to the per-task loop, in
+        O(distinct regions) Python work. Returns the (B,) per-task carbon.
+
+        ``groups`` mirrors ``EdgeCluster.execute_batch``: a precomputed
+        ``np.unique(..., return_inverse=True)`` over ``regions``.
+
+        Atomic: all inputs resolve before the first account write."""
+        B = len(regions)
+        if not B:
+            return np.zeros(0)
+        e = np.broadcast_to(np.asarray(e_kwh, dtype=float), (B,))
+        if groups is None:
+            groups = np.unique(np.asarray(regions, dtype=object),
+                               return_inverse=True)
+        uniq, inverse = groups
+        if intensities is None:
+            per_uniq = self.billing_intensity_batch(list(uniq), hour)
+            ints = per_uniq[inverse]
+        else:
+            ints = np.broadcast_to(np.asarray(intensities, dtype=float), (B,))
+        accs = [self.regions[r] for r in uniq]        # KeyError like scalar
+        pues = np.array([a.pue for a in accs], dtype=float)[inverse]
+        c = energy_mod.carbon_g(e, ints, pues)
+        order = np.argsort(inverse, kind="stable")
+        bounds = np.searchsorted(inverse[order], np.arange(len(uniq) + 1))
+        for k, acc in enumerate(accs):
+            idx = order[bounds[k]:bounds[k + 1]]
+            acc.energy_kwh = energy_mod.ledger_add(acc.energy_kwh, e[idx])
+            acc.carbon_g = energy_mod.ledger_add(acc.carbon_g, c[idx])
+            acc.tasks += int(idx.size)
+        return c
 
     def _bill(self, region: str, e_kwh: float, hour: float = 0.0) -> float:
         acc = self.regions[region]

@@ -13,8 +13,10 @@ scheduler only sees NodeSpec/NodeState (see launch/serve.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core import energy as energy_mod
 
@@ -66,7 +68,7 @@ class NodeState:
                 sink.add(self.spec.name)
 
 
-@dataclass
+@dataclass(slots=True)
 class TaskResult:
     node: str
     latency_ms: float
@@ -155,7 +157,7 @@ class EdgeCluster:
         # execution time; None keeps the static regional value.
         if intensity is None:
             intensity = st.spec.carbon_intensity
-        e_kwh = self.host_power_w * (lat / 1000.0) / 3.6e6
+        e_kwh = energy_mod.task_energy_kwh(self.host_power_w, lat)
         c_g = energy_mod.carbon_g(e_kwh, intensity, self.pue)
         st.completed += 1
         st.total_time_ms += lat
@@ -164,6 +166,80 @@ class EdgeCluster:
         res = TaskResult(node_name, lat, e_kwh, c_g)
         self.log.append(res)
         return res
+
+    def latency_energy(self, base_latency_ms, distributed: bool = True):
+        """(B,) measured latency and billed energy for a batch of base
+        latencies — THE single source of the execution cost model's
+        elementwise math (`measured_latency_ms` x `energy.task_energy_kwh`),
+        shared by :meth:`execute_batch` and the engine's billing path so
+        the two cannot drift."""
+        base = np.asarray(base_latency_ms, dtype=float)
+        if distributed:
+            lat = base * (1.0 + self.distribution_overhead)
+        else:
+            lat = base.astype(float)
+        return lat, energy_mod.task_energy_kwh(self.host_power_w, lat)
+
+    def execute_batch(self, node_names: Sequence[str], base_latency_ms,
+                      distributed: bool = True, intensities=None,
+                      groups=None) -> List[TaskResult]:
+        """Execute B placed tasks in one shot (DESIGN.md §6).
+
+        ``node_names`` is the per-task chosen node; ``base_latency_ms`` and
+        ``intensities`` are scalars or (B,) arrays (``intensities=None``
+        bills each task at its node's static regional value). Latency,
+        energy and carbon are computed as (B,) arrays through the same
+        elementwise arithmetic as :meth:`execute`, and each node's ledger
+        is updated **once** — O(distinct nodes) Python work, with the float
+        accumulations folded in strict task order
+        (:func:`~repro.core.energy.ledger_add`) so ledgers stay
+        bit-identical to B scalar ``execute`` calls. The per-task loop
+        survives as the parity oracle (tests/test_exec_batch.py).
+
+        ``groups`` lets a caller that already grouped the batch pass the
+        ``np.unique(node_names_as_object_array, return_inverse=True)``
+        result so it is not recomputed (the engine shares one grouping
+        across execute and billing).
+
+        Atomic: every input (including unknown node names → ``KeyError``)
+        is resolved and all arrays are computed *before* the first ledger
+        write, so a failure leaves the cluster untouched.
+        """
+        B = len(node_names)
+        if not B:
+            return []
+        if groups is None:
+            groups = np.unique(np.asarray(node_names, dtype=object),
+                               return_inverse=True)
+        uniq, inverse = groups
+        group_states = [self.nodes[n] for n in uniq]   # KeyError before writes
+        base = np.broadcast_to(np.asarray(base_latency_ms, dtype=float), (B,))
+        lat, e_kwh = self.latency_energy(base, distributed)
+        if intensities is None:
+            ints = np.array([st.spec.carbon_intensity
+                             for st in group_states], dtype=float)[inverse]
+        else:
+            ints = np.broadcast_to(np.asarray(intensities, dtype=float), (B,))
+        c_g = energy_mod.carbon_g(e_kwh, ints, self.pue)
+        # Group tasks by node: a stable argsort over the inverse index gives
+        # each distinct node a contiguous run of task positions in original
+        # task order (what ledger_add's sequential fold requires).
+        order = np.argsort(inverse, kind="stable")
+        bounds = np.searchsorted(inverse[order], np.arange(len(uniq) + 1))
+        for k, st in enumerate(group_states):
+            idx = order[bounds[k]:bounds[k + 1]]
+            st.completed += int(idx.size)
+            st.total_time_ms = energy_mod.ledger_add(st.total_time_ms,
+                                                     lat[idx])
+            st.energy_kwh = energy_mod.ledger_add(st.energy_kwh, e_kwh[idx])
+            st.carbon_g = energy_mod.ledger_add(st.carbon_g, c_g[idx])
+        # .tolist() hands back Python floats in one C pass (matching the
+        # scalar path's TaskResult field types) and map() iterates the
+        # constructor at C speed — this is the only remaining O(B) cost.
+        results = list(map(TaskResult, node_names, lat.tolist(),
+                           e_kwh.tolist(), c_g.tolist()))
+        self.log.extend(results)
+        return results
 
     # -- concurrent accounting (paper §V.A quota apportionment) ------------
     def apportion(self, window_energy_kwh: float) -> Dict[str, float]:

@@ -21,21 +21,21 @@ from repro.configs.base import CNNConfig, ConvLayerDef, LayerDef, ModelConfig
 # ---------------------------------------------------------------------------
 
 
-def cnn_layer_cost(l: ConvLayerDef) -> float:
-    if l.kind == "conv":
-        return float(l.k * l.k * l.cin * l.cout)
-    if l.kind == "dwconv":
+def cnn_layer_cost(layer: ConvLayerDef) -> float:
+    if layer.kind == "conv":
+        return float(layer.k * layer.k * layer.cin * layer.cout)
+    if layer.kind == "dwconv":
         # Depthwise = Conv2D with Cout channels of 1-in-group: kh*kw*Cin.
-        return float(l.k * l.k * l.cin)
-    if l.kind == "linear":
-        return float(l.cin * l.cout)
-    if l.kind == "se":
-        return float(2 * l.cin * l.cout + l.cin + l.cout)  # params_count
+        return float(layer.k * layer.k * layer.cin)
+    if layer.kind == "linear":
+        return float(layer.cin * layer.cout)
+    if layer.kind == "se":
+        return float(2 * layer.cin * layer.cout + layer.cin + layer.cout)  # params_count
     return 0.0  # pool / act: negligible ("others" with ~0 params)
 
 
 def cnn_costs(cfg: CNNConfig) -> List[float]:
-    return [cnn_layer_cost(l) for l in cfg.layers]
+    return [cnn_layer_cost(layer) for layer in cfg.layers]
 
 
 # ---------------------------------------------------------------------------

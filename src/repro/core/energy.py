@@ -8,11 +8,20 @@ Three roofline terms per compiled step:
 
 The step-time model is max(terms); energy = chips * power * time; carbon =
 energy * intensity * PUE (paper Eq. 2).
+
+Every accounting function here is **array-valued** (DESIGN.md §6): pass
+scalars and get scalars, pass (B,) arrays and get (B,) arrays computed by
+the *same elementwise arithmetic* — this is what lets the batched
+execution path (`EdgeCluster.execute_batch`,
+`CarbonMonitor.record_energy_batch`) bill a whole batch in one shot while
+staying bit-identical to the per-task scalar loop.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict
+
+import numpy as np
 
 # TPU v5e per-chip constants (assignment-specified).
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
@@ -30,6 +39,11 @@ class RooflineTerms:
 
     @property
     def step_time_s(self) -> float:
+        if any(isinstance(t, np.ndarray)
+               for t in (self.compute_s, self.memory_s, self.collective_s)):
+            # array-valued terms (batched accounting): elementwise max
+            return np.maximum(np.maximum(self.compute_s, self.memory_s),
+                              self.collective_s)
         return max(self.compute_s, self.memory_s, self.collective_s)
 
     @property
@@ -61,7 +75,31 @@ def step_energy_kwh(terms: RooflineTerms, chips: int,
     return p_total * terms.step_time_s / 3.6e6
 
 
-def carbon_g(energy_kwh: float, intensity_g_per_kwh: float,
-             pue: float = 1.0) -> float:
-    """Paper Eq. 2: C = E * I * PUE."""
+def task_energy_kwh(power_w, latency_ms):
+    """Full-host-power task energy (CodeCarbon machine-mode accounting) —
+    the serial-execution billing rule ``EdgeCluster.execute`` uses.
+    Array-valued: ``latency_ms`` may be a (B,) array, and each element goes
+    through exactly the scalar expression."""
+    return power_w * (latency_ms / 1000.0) / 3.6e6
+
+
+def carbon_g(energy_kwh, intensity_g_per_kwh, pue=1.0):
+    """Paper Eq. 2: C = E * I * PUE. Array-valued: any argument may be a
+    (B,) array; elementwise evaluation order matches the scalar call."""
     return energy_kwh * intensity_g_per_kwh * pue
+
+
+def ledger_add(start: float, values) -> float:
+    """Fold ``values`` into a running float ledger in strict left-to-right
+    order: returns ``(((start + v0) + v1) + ...)`` exactly as a scalar
+    ``ledger += v`` loop would compute it. ``np.add.accumulate`` evaluates
+    sequentially (unlike ``np.sum``'s pairwise reduction), which is what
+    keeps batched ledger updates bit-identical to the per-task loop they
+    replace (DESIGN.md §6)."""
+    vals = np.asarray(values, dtype=float).reshape(-1)
+    if vals.size == 0:
+        return float(start)
+    acc = np.empty(vals.size + 1)
+    acc[0] = start
+    acc[1:] = vals
+    return float(np.add.accumulate(acc)[-1])

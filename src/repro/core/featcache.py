@@ -46,6 +46,12 @@ class FeatureCache:
 
     def __init__(self, cluster):
         self.cluster = cluster
+        # Feature-state revision: bumped only when a refresh actually
+        # CHANGES a column value (or the topology rebuilds) — a dirty node
+        # whose re-read values are identical leaves it untouched. Consumers
+        # (the VectorizedPolicy selection memo, DESIGN.md §6) may reuse any
+        # pure function of the columns while data_rev is unchanged.
+        self.data_rev = 0
         self._rebuild()
 
     # -- construction / refresh -------------------------------------------
@@ -56,10 +62,24 @@ class FeatureCache:
                     "power", "e_est", "carbon_static"):
             setattr(self, col, np.zeros(n))
 
-    def _refresh_row(self, i: int, st) -> None:
+    def _refresh_row(self, i: int, st) -> bool:
         # Scalar per-row math, in exactly featurize's evaluation order, so
-        # cached columns bit-match the fresh per-node loop.
+        # cached columns bit-match the fresh per-node loop. Returns whether
+        # any column value actually changed (ledger-only mutations — e.g. a
+        # batch of executions — re-dirty a node without moving its
+        # features; those must not bump data_rev).
         spec = st.spec
+        p = st.power_w(self.cluster.host_power_w)
+        changed = not (self.cpu[i] == spec.cpu
+                       and self.mem_mb[i] == spec.mem_mb
+                       and self.load[i] == st.load
+                       and self.mem_used[i] == st.mem_used_mb
+                       and self.avg_time_ms[i] == st.avg_time_ms
+                       and self.running[i] == st.running
+                       and self.power[i] == p
+                       and self.carbon_static[i] == spec.carbon_intensity)
+        if not changed:
+            return False
         self.cpu[i] = spec.cpu
         self.mem_mb[i] = spec.mem_mb
         self.load[i] = st.load
@@ -69,10 +89,10 @@ class FeatureCache:
         self.avg_time_ms[i] = st.avg_time_ms
         self.avg_time_s[i] = st.avg_time_ms / 1000.0
         self.running[i] = st.running
-        p = st.power_w(self.cluster.host_power_w)
         self.power[i] = p
         self.e_est[i] = p * st.avg_time_ms / 3.6e6
         self.carbon_static[i] = spec.carbon_intensity
+        return True
 
     def _rebuild(self) -> None:
         cl = self.cluster
@@ -88,6 +108,7 @@ class FeatureCache:
             self._refresh_row(i, st)
         cl._dirty.clear()
         self._topo_seen = cl._topo_rev
+        self.data_rev += 1
         self._reset_intensity_cache()
 
     def sync(self) -> None:
@@ -100,13 +121,16 @@ class FeatureCache:
         if cl._dirty:
             nodes = cl.nodes
             index = self.index
+            changed = False
             for name in cl._dirty:
                 i = index.get(name)
                 if i is None:          # name we never indexed: stale topo
                     self._rebuild()
                     return
-                self._refresh_row(i, nodes[name])
+                changed |= self._refresh_row(i, nodes[name])
             cl._dirty.clear()
+            if changed:
+                self.data_rev += 1
 
     # -- intensity memoization --------------------------------------------
     def _reset_intensity_cache(self) -> None:

@@ -16,7 +16,7 @@ from repro.core.api import (CarbonIntensityProvider, FallbackProvider,
 from repro.core.carbon import CarbonMonitor
 from repro.core.cluster import EdgeCluster, NodeSpec
 from repro.core.energy import RooflineTerms
-from repro.core.scheduler import MODES, Task, Weights
+from repro.core.scheduler import MODES, Task
 
 
 @dataclass(frozen=True)

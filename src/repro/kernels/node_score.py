@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 
@@ -197,8 +196,6 @@ def _sharded_select_fn(mesh, axis: str, bn: int, interpret: bool):
     device scores its node shard with the fused kernel, then a cross-shard
     argmax combine picks the global winner (lowest global index on ties)."""
     from repro import compat
-
-    n_shards = mesh.shape[axis]
 
     def local_select(f_local, w):
         # f_local: (B, N/d, 8) on this device

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 
 from repro.checkpoint import store
 from repro.configs.registry import get_config, list_archs, reduced_config
-from repro.core import costmodel, energy
 from repro.core.carbon import CarbonMonitor
 from repro.data.pipeline import DataConfig, make_batches
 from repro.models import transformer

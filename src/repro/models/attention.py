@@ -262,7 +262,7 @@ def attn_decode(cfg: ModelConfig, p, x, cache: Tuple, pos, *, window=None,
     k, v = _project_kv(cfg, p, x)
     pos_b = jnp.full((B, 1), pos)
     q, k = _positions(cfg, q, k, pos_b, pos_b, mrope_pos)
-    from repro.sharding import rules as _rules_upd
+    from repro.sharding import rules as _rules_upd  # noqa: F401 (registers update rules)
     from repro.sharding.constraints import _current_mesh as _cm
 
     _mesh_upd = _cm()

@@ -9,7 +9,7 @@ simulated edge nodes.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -20,65 +20,66 @@ from repro.configs.base import CNNConfig, ConvLayerDef
 
 def param_count(cfg: CNNConfig) -> int:
     n = 0
-    for l in cfg.layers:
-        if l.kind == "conv":
-            n += l.k * l.k * l.cin * l.cout + l.cout
-        elif l.kind == "dwconv":
-            n += l.k * l.k * l.cin + l.cin
-        elif l.kind == "linear":
-            n += l.cin * l.cout + l.cout
-        elif l.kind == "se":
-            n += 2 * l.cin * l.cout + l.cin + l.cout
+    for ld in cfg.layers:
+        if ld.kind == "conv":
+            n += ld.k * ld.k * ld.cin * ld.cout + ld.cout
+        elif ld.kind == "dwconv":
+            n += ld.k * ld.k * ld.cin + ld.cin
+        elif ld.kind == "linear":
+            n += ld.cin * ld.cout + ld.cout
+        elif ld.kind == "se":
+            n += 2 * ld.cin * ld.cout + ld.cin + ld.cout
     return n
 
 
 def init_params(cfg: CNNConfig, key: jax.Array) -> List[Dict]:
     params = []
-    for i, l in enumerate(cfg.layers):
+    for i, ld in enumerate(cfg.layers):
         k = jax.random.fold_in(key, i)
-        if l.kind == "conv":
-            fan_in = l.k * l.k * l.cin
-            w = jax.random.normal(k, (l.k, l.k, l.cin, l.cout)) * np.sqrt(2.0 / fan_in)
-            params.append({"w": w, "b": jnp.zeros((l.cout,))})
-        elif l.kind == "dwconv":
-            fan_in = l.k * l.k
-            w = jax.random.normal(k, (l.k, l.k, 1, l.cin)) * np.sqrt(2.0 / fan_in)
-            params.append({"w": w, "b": jnp.zeros((l.cin,))})
-        elif l.kind == "linear":
-            w = jax.random.normal(k, (l.cin, l.cout)) * np.sqrt(1.0 / l.cin)
-            params.append({"w": w, "b": jnp.zeros((l.cout,))})
-        elif l.kind == "se":
-            w1 = jax.random.normal(k, (l.cin, l.cout)) * np.sqrt(1.0 / l.cin)
-            w2 = jax.random.normal(jax.random.fold_in(k, 1), (l.cout, l.cin)) * np.sqrt(1.0 / l.cout)
-            params.append({"w1": w1, "b1": jnp.zeros((l.cout,)),
-                           "w2": w2, "b2": jnp.zeros((l.cin,))})
+        if ld.kind == "conv":
+            fan_in = ld.k * ld.k * ld.cin
+            w = jax.random.normal(k, (ld.k, ld.k, ld.cin, ld.cout)) * np.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((ld.cout,))})
+        elif ld.kind == "dwconv":
+            fan_in = ld.k * ld.k
+            w = jax.random.normal(k, (ld.k, ld.k, 1, ld.cin)) * np.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((ld.cin,))})
+        elif ld.kind == "linear":
+            w = jax.random.normal(k, (ld.cin, ld.cout)) * np.sqrt(1.0 / ld.cin)
+            params.append({"w": w, "b": jnp.zeros((ld.cout,))})
+        elif ld.kind == "se":
+            w1 = jax.random.normal(k, (ld.cin, ld.cout)) * np.sqrt(1.0 / ld.cin)
+            w2 = (jax.random.normal(jax.random.fold_in(k, 1), (ld.cout, ld.cin))
+                  * np.sqrt(1.0 / ld.cout))
+            params.append({"w1": w1, "b1": jnp.zeros((ld.cout,)),
+                           "w2": w2, "b2": jnp.zeros((ld.cin,))})
         else:
             params.append({})
     return params
 
 
-def _apply_layer(l: ConvLayerDef, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
-    if l.kind == "conv":
-        pad = (l.k - 1) // 2
+def _apply_layer(ld: ConvLayerDef, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    if ld.kind == "conv":
+        pad = (ld.k - 1) // 2
         x = jax.lax.conv_general_dilated(
-            x, p["w"], (l.stride, l.stride), [(pad, pad), (pad, pad)],
+            x, p["w"], (ld.stride, ld.stride), [(pad, pad), (pad, pad)],
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
         return jax.nn.relu6(x + p["b"])
-    if l.kind == "dwconv":
-        pad = (l.k - 1) // 2
+    if ld.kind == "dwconv":
+        pad = (ld.k - 1) // 2
         x = jax.lax.conv_general_dilated(
-            x, p["w"], (l.stride, l.stride), [(pad, pad), (pad, pad)],
+            x, p["w"], (ld.stride, ld.stride), [(pad, pad), (pad, pad)],
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            feature_group_count=l.cin)
+            feature_group_count=ld.cin)
         return jax.nn.relu6(x + p["b"])
-    if l.kind == "se":
+    if ld.kind == "se":
         g = jnp.mean(x, axis=(1, 2))
         y = jax.nn.relu(g @ p["w1"] + p["b1"])
         y = jax.nn.sigmoid(y @ p["w2"] + p["b2"])
         return x * y[:, None, None, :]
-    if l.kind == "linear":
+    if ld.kind == "linear":
         return x @ p["w"] + p["b"]
-    if l.kind == "pool":
+    if ld.kind == "pool":
         return jnp.mean(x, axis=(1, 2)) if x.ndim == 4 else x
     return x
 
@@ -101,14 +102,14 @@ def activation_bytes(cfg: CNNConfig, boundary: int, batch: int = 1,
     size = cfg.input_size
     ch = cfg.input_channels
     flat = False
-    for l in cfg.layers[:boundary]:
-        if l.kind in ("conv", "dwconv"):
-            size = -(-size // l.stride)
-            ch = l.cout if l.kind == "conv" else l.cin
-        elif l.kind == "pool":
+    for ld in cfg.layers[:boundary]:
+        if ld.kind in ("conv", "dwconv"):
+            size = -(-size // ld.stride)
+            ch = ld.cout if ld.kind == "conv" else ld.cin
+        elif ld.kind == "pool":
             flat = True
-        elif l.kind == "linear":
+        elif ld.kind == "linear":
             flat = True
-            ch = l.cout if l.cout != 0 else ch
+            ch = ld.cout if ld.cout != 0 else ch
     n = ch if flat else size * size * ch
     return n * batch * dtype_bytes

@@ -10,7 +10,6 @@ from the spec we derive, without duplication:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -152,7 +151,8 @@ def apply_mrope(x, positions, theta: float, sections: Tuple[int, ...]):
     # pos_per_freq: (B, S, D/2)
     pos = jnp.take_along_axis(
         positions.astype(jnp.float32).transpose(0, 2, 1),  # (B, S, 3)
-        jnp.broadcast_to(sec_id[None, None, :], positions.shape[0:1] + (positions.shape[2], d // 2)),
+        jnp.broadcast_to(sec_id[None, None, :],
+                         positions.shape[0:1] + (positions.shape[2], d // 2)),
         axis=-1,
     )
     angles = (pos * freqs)[..., None, :]                   # (B, S, 1, D/2)

@@ -158,7 +158,6 @@ def _moe_forward_shardmap(cfg: ModelConfig, p, x, mesh, dp, dp_size, msize):
     T_loc = T // dp_size              # tokens per data row
     T_m = T_loc // msize              # tokens per (data, model) shard
     C_m = _capacity(T_m, k, m.num_experts)
-    E_loc = E_pad // msize
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
 
     def local_fn(x_loc, router_w, w_gate, w_up, w_down):

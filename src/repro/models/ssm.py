@@ -11,7 +11,7 @@ B/C (GVA). conv_dim = inner + 2*G*N is depthwise-convolved causally.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,7 @@ Public API:
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,7 +74,6 @@ def model_spec(cfg: ModelConfig) -> Dict:
         spec["suffix"] = common.stack_spec(
             block_spec(cfg, cfg.suffix[0], decoder=True), len(cfg.suffix))
     if cfg.encoder_layers:
-        enc_ld = LayerDef("attn")
         spec["encoder"] = common.stack_spec(
             _encoder_block_spec(cfg), cfg.encoder_layers)
         spec["encoder_norm"] = common.norm_spec(cfg, D)
@@ -201,7 +199,6 @@ def encode(cfg: ModelConfig, params, enc_embeds):
     pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     if cfg.pos_emb == "sinusoidal":
         h = h + common.sinusoidal_pos_emb(pos, cfg.d_model).astype(h.dtype)
-    ctx = {"causal": False, "positions": pos}
 
     def body(carry, xs):
         hh = carry

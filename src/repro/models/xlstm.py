@@ -9,7 +9,7 @@ head_dim) matrix state per head. sLSTM is inherently sequential
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

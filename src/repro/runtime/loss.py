@@ -37,9 +37,9 @@ def chunked_ce(cfg: ModelConfig, params, hidden, labels, mask=None):
     def body(carry, i):
         tot, cnt = carry
         h = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
-        l = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        lbl = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
         m = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
-        s, c = _ce(cfg, params, h, l, m)
+        s, c = _ce(cfg, params, h, lbl, m)
         return (tot + s, cnt + c), None
 
     (tot, cnt), _ = modes.scan(

@@ -9,7 +9,7 @@ ones the dry-run lowers for the production mesh.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
@@ -18,8 +18,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import costmodel, energy
-from repro.core.router import GreenRouter, PodSpec
-from repro.models import transformer
+from repro.core.router import GreenRouter
 from repro.runtime import steps
 
 

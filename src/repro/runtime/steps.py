@@ -5,7 +5,7 @@ dry-run lowers against ShapeDtypeStructs.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

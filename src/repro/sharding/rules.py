@@ -57,7 +57,7 @@ def spec_from_axes(axes: Tuple[Optional[str], ...],
 
 
 def param_pspecs(cfg, mode: str, mesh: Mesh):
-    from repro.models import common, transformer
+    from repro.models import transformer
     from repro.models.common import ParamSpec
 
     rules = rules_for(mode)

@@ -21,7 +21,7 @@ dynamics drive the carbon savings available to a deferral policy):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Protocol, Sequence, Union, runtime_checkable
 
 import numpy as np

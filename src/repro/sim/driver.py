@@ -13,7 +13,11 @@ executor steps through simulated time:
   ``executor.step(now_hour=clock.hour, limit=...)`` call — with the
   default :class:`~repro.core.api.CarbonEdgeEngine` that is one (B, N, 8)
   featurize + one vectorized/Pallas scorer invocation per event batch,
-  not one per task — honouring the executor's busy time so queueing
+  not one per task, and since DESIGN.md §6 the execute+billing half is
+  batched too (one ``cluster.execute_batch`` + one
+  ``monitor.record_energy_batch`` per drained batch, bit-identical to the
+  per-task loop, so ``metrics.to_text`` is byte-stable across both
+  execution paths) — honouring the executor's busy time so queueing
   delay emerges from load rather than being assumed;
 - ``INTENSITY_TICK`` events sample the carbon-vs-latency timeline.
 

@@ -5,7 +5,7 @@ import pytest
 from repro.core.api import (CarbonEdgeEngine, ForecastProvider,
                             StaticProvider, TraceProvider)
 from repro.core.carbon import CarbonMonitor
-from repro.core.cluster import EdgeCluster, NodeSpec, PAPER_NODES
+from repro.core.cluster import EdgeCluster, PAPER_NODES
 from repro.core.policy import (TemporalPolicy, VectorizedPolicy,
                                WeightedScoringPolicy)
 from repro.core.scheduler import MODES, Task, run_workload

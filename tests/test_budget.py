@@ -1,7 +1,4 @@
 """Multi-tenant carbon budgets (paper §V future work)."""
-import numpy as np
-import pytest
-
 from repro.core.budget import BudgetedRouter
 from repro.core.energy import RooflineTerms
 from repro.core.router import GreenRouter, PodSpec

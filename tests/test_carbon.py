@@ -1,9 +1,6 @@
 """Carbon monitor (Eq. 1/2), energy/roofline model, cluster accounting."""
-import numpy as np
-import pytest
-
 from repro.core import energy
-from repro.core.carbon import RAM_W_PER_GB, CarbonMonitor, WallClockEnergyTracker
+from repro.core.carbon import CarbonMonitor, WallClockEnergyTracker
 from repro.core.cluster import EdgeCluster, PAPER_NODES
 from repro.core.router import GreenRouter, PodSpec
 
@@ -71,7 +68,7 @@ def test_wallclock_tracker():
     m = CarbonMonitor()
     m.register_region("here", 400.0)
     with WallClockEnergyTracker(m, "here", power_w=100.0) as t:
-        x = sum(range(10000))
+        sum(range(10000))
     assert t.elapsed_s > 0
     assert t.carbon_g >= 0
     assert m.regions["here"].tasks == 1

@@ -1,8 +1,6 @@
 """Paper-validation: the benchmark suite must land in the paper's bands."""
 import numpy as np
-import pytest
-
-from benchmarks import (common, fig2_tradeoff, fig3_weight_sweep, overhead,
+from benchmarks import (fig2_tradeoff, fig3_weight_sweep, overhead,
                         table2_carbon_footprint, table4_multi_model,
                         table5_node_distribution)
 

@@ -6,7 +6,7 @@ from repro.configs.base import ConvLayerDef
 from repro.configs.cnn_zoo import get_cnn_config
 from repro.configs.registry import get_config
 from repro.core import costmodel
-from repro.core.partitioner import (Partition, capacity_weights,
+from repro.core.partitioner import (capacity_weights,
                                     green_weights, partition_cnn,
                                     partition_costs, partition_transformer)
 
@@ -50,14 +50,14 @@ def test_comm_weight_moves_boundary():
     """Cheap cut points attract boundaries when comm cost matters."""
     costs = [1.0] * 10
     bb = [0.0] + [100.0] * 4 + [0.0] + [100.0] * 4 + [0.0]  # cheap cut at 5
-    p_free = partition_costs(costs, [1.0, 1.0], bb, comm_weight=0.0)
+    partition_costs(costs, [1.0, 1.0], bb, comm_weight=0.0)
     p_comm = partition_costs(costs, [1.0, 1.0], bb, comm_weight=1.0)
     assert p_comm.boundaries[1] == 5
     assert abs(sum(p_comm.segment_costs) - 10.0) < 1e-9
 
 
 def test_green_weights_prefer_low_carbon():
-    cap = capacity_weights([1.0, 1.0])
+    capacity_weights([1.0, 1.0])
     g = green_weights([1.0, 1.0], [620.0, 380.0], carbon_weight=0.5)
     assert g[1] > g[0]
     # and a full-capacity bias at carbon_weight=0 reduces to capacity

@@ -11,7 +11,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cluster import EdgeCluster, NodeSpec
 from repro.core.partitioner import green_weights, partition_costs
-from repro.core.scheduler import MODES, Task, Weights, scores, select_node
+from repro.core.scheduler import MODES, Task, scores, select_node
 
 SET = settings(max_examples=50, deadline=None)
 

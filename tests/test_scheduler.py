@@ -1,9 +1,7 @@
 """Carbon-aware scheduler: Algorithm 1 semantics + paper behaviour claims."""
 import numpy as np
-import pytest
-
-from repro.core.cluster import EdgeCluster, NodeSpec, PAPER_NODES
-from repro.core.scheduler import (MODES, Task, Weights, run_workload,
+from repro.core.cluster import EdgeCluster, PAPER_NODES
+from repro.core.scheduler import (MODES, Task, run_workload,
                                   score_table, select_node, sweep_weights,
                                   vector_scores)
 

@@ -4,7 +4,6 @@ their own interpreter)."""
 import json
 import subprocess
 import sys
-import textwrap
 
 import pytest
 
@@ -12,8 +11,6 @@ from jax.sharding import PartitionSpec as P
 
 
 def test_spec_from_axes_divisibility():
-    import jax
-
     from repro.sharding import rules
 
     class FakeMesh:
@@ -94,7 +91,7 @@ def test_distributed_train_step_matches_single_device():
              "HOME": "/root", "JAX_PLATFORMS": "cpu"},
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT::")][0]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT::")][0]
     out = json.loads(line[len("RESULT::"):])
     assert out["compiled_ok"]
     assert abs(out["loss_distributed"] - out["loss_single"]) < 1e-2, out
@@ -134,7 +131,7 @@ def test_multipod_decode_lowers():
              "HOME": "/root", "JAX_PLATFORMS": "cpu"},
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT::")][0]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT::")][0]
     out = json.loads(line[len("RESULT::"):])
     assert all(out.values()) and len(out) == 3
 
@@ -186,7 +183,7 @@ def test_sharded_node_select_8_devices():
              "HOME": "/root", "JAX_PLATFORMS": "cpu"},
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT::")][0]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT::")][0]
     out = json.loads(line[len("RESULT::"):])
     assert out["n_devices"] == 8, out
     assert out["match"] and out["val_close"], out

@@ -3,8 +3,6 @@ generates and accounts carbon; the full CarbonEdge story in one pass."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
 from repro.configs.registry import reduced_config
 from repro.core import costmodel, energy
 from repro.core.router import GreenRouter, PodSpec

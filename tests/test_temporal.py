@@ -30,7 +30,7 @@ requires_hypothesis = pytest.mark.skipif(
 
 from repro.core.cluster import EdgeCluster, PAPER_NODES
 from repro.core.scheduler import MODES
-from repro.core.temporal import (DeferrableTask, IntensityTrace, Placement,
+from repro.core.temporal import (DeferrableTask, IntensityTrace,
                                  TemporalScheduler,
                                  carbon_savings_from_deferral,
                                  synthetic_trace)
