@@ -7,6 +7,7 @@ function here, so a red CI can be reproduced and debugged from a checkout:
     PYTHONPATH=src:. python -m benchmarks.ci_gates overhead
     PYTHONPATH=src:. python -m benchmarks.ci_gates fleet
     PYTHONPATH=src:. python -m benchmarks.ci_gates sim
+    PYTHONPATH=src:. python -m benchmarks.ci_gates tenancy
     PYTHONPATH=src:. python -m benchmarks.ci_gates trend --baseline PREV.json
 
 (or ``python -m benchmarks.run --gate NAME`` — same registry.)
@@ -24,6 +25,13 @@ Gates:
 - **sim** — fixed-seed sim is byte-deterministic, green mode beats
   performance mode under load, accurate-forecast deferral beats run-now,
   forecast error degrades savings monotonically, static-scenario parity.
+- **tenancy** — closed-loop multi-tenant sim is byte-deterministic (across
+  a repeat run AND across the batched/scalar execute paths); no capped
+  tenant's single-period spend exceeds its allowance by more than one
+  task's carbon; the admission-enabled end-to-end step stays under a
+  loose absolute per-task bound and within a small factor of the
+  tenancy-free step (the 30 µs/task paper-budget row is the full
+  ``benchmarks/tenancy_saturation.py`` run); writes BENCH_tenancy.json.
 - **trend** — compare this checkout's fleet-scale end-to-end per-task
   times against a previous run's ``BENCH_fleet_scale.json`` (CI restores
   the last main-branch run via actions/cache) and fail on a >2x relative
@@ -103,6 +111,27 @@ def gate_sim() -> Dict:
     return a
 
 
+def gate_tenancy(out_path: str = "BENCH_tenancy.json") -> Dict:
+    from benchmarks import tenancy_saturation
+
+    out = tenancy_saturation.run(smoke=True, out_path=out_path)
+    d = out["determinism"]
+    assert d["repeat_match"], "closed-loop sim not repeat-deterministic"
+    assert d["exec_path_match"], \
+        "closed-loop sim diverged across batched/scalar execute paths"
+    for r in out["saturation"]:
+        # admission invariant: <= one task's carbon of overshoot in any
+        # accounting period, for every capped tenant
+        assert r["max_overshoot_tasks"] <= 1.0 + 1e-9, r
+        assert r["completed"] > 0, r
+    for r in out["overhead"]:
+        # loose absolute bound (CI runners vary) + relative bound vs the
+        # tenancy-free engine step on the same fleet and request mix
+        assert r["tenancy_per_task_ms"] < 0.5, r
+        assert r["overhead_x"] < 20.0, r
+    return out
+
+
 def _trend_rows(bench: Dict) -> Dict[tuple, float]:
     """(section, n_nodes, batch) -> per-task ms for the rows the trend
     gate tracks: cached selection and the end-to-end batched step."""
@@ -154,6 +183,7 @@ GATES: Dict[str, Callable] = {
     "overhead": gate_overhead,
     "fleet": gate_fleet,
     "sim": gate_sim,
+    "tenancy": gate_tenancy,
     "trend": gate_trend,
 }
 

@@ -14,7 +14,8 @@ def main() -> None:
     from benchmarks import (fig2_tradeoff, fig3_weight_sweep, fleet_scale,
                             overhead, roofline, sim_serving,
                             table2_carbon_footprint, table4_multi_model,
-                            table5_node_distribution, temporal_shifting)
+                            table5_node_distribution, temporal_shifting,
+                            tenancy_saturation)
 
     rows = []
 
@@ -78,6 +79,16 @@ def main() -> None:
                  loaded["wait_s_p95"] * 1e6,
                  f"slo_violation_rate={loaded['slo_violation_rate']:.3f}"))
 
+    tn = tenancy_saturation.run()
+    ov_t = max(tn["overhead"], key=lambda r: (r["n_nodes"], r["batch"]))
+    rows.append((f"tenancy_step_e2e_{ov_t['n_nodes']}n_{ov_t['batch']}b",
+                 ov_t["tenancy_per_task_ms"] * 1e3,
+                 f"admission_overhead_us={ov_t['admission_overhead_us_per_task']:.2f}"))
+    sat = max(tn["saturation"],
+              key=lambda r: (r["clients_per_tenant"], -r["allowance_scale"]))
+    rows.append(("tenancy_saturation_fairness", 0.0,
+                 f"jain={sat['budget_fairness_jain']:.3f}"))
+
     for r in roofline.load():
         rows.append((f"roofline_{r['arch']}_{r['shape']}",
                      r["step_time_s"] * 1e6,
@@ -94,8 +105,8 @@ if __name__ == "__main__":
     parser = argparse.ArgumentParser(description="benchmark / CI gate driver")
     parser.add_argument("--gate", default=None,
                         help="run a CI gate from benchmarks.ci_gates "
-                             "('overhead', 'fleet', 'sim', 'trend', 'all') "
-                             "instead of the benchmark CSV")
+                             "('overhead', 'fleet', 'sim', 'tenancy', "
+                             "'trend', 'all') instead of the benchmark CSV")
     parser.add_argument("--baseline", default=None,
                         help="baseline BENCH_fleet_scale.json for --gate trend")
     cli = parser.parse_args()

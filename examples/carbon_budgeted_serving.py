@@ -1,59 +1,76 @@
 """Beyond-paper demo: multi-tenant carbon budgets + temporal shifting.
 
-Two tenants share a 3-region pod fleet. Tenant A has a tight carbon
-allowance: as it drains, the BudgetedRouter escalates it from performance
-mode to green mode and finally denies admission; tenant B is unaffected.
-Deferrable batch jobs submitted in the evening shift into the midday solar
-dip via the TemporalScheduler.
+Two tenants share the paper's 3-node edge cluster through the
+``repro.tenancy`` subsystem (DESIGN.md §7). Tenant A has a tight periodic
+carbon allowance: as it drains, the TenantPolicy escalates A's effective
+mode (performance -> balanced -> green), clamps its placements to the
+greenest feasible node, and finally defers A's work to its next
+accounting period — all applied by the engine before selection. Tenant B
+is unaffected. Deferrable batch jobs submitted in the evening still shift
+into the midday solar dip via the TemporalScheduler.
+
+(The pre-tenancy BudgetedRouter API survives as a deprecation shim over
+this policy — see repro/core/budget.py.)
 
 Run:  PYTHONPATH=src python examples/carbon_budgeted_serving.py
 """
-from repro.core.budget import BudgetedRouter
+from repro.core.api import CarbonEdgeEngine
 from repro.core.cluster import EdgeCluster, PAPER_NODES
-from repro.core.energy import RooflineTerms
-from repro.core.router import GreenRouter, PodSpec
 from repro.core.scheduler import MODES
 from repro.core.temporal import (DeferrableTask, TemporalScheduler,
                                  synthetic_trace)
-
-PODS = [
-    PodSpec("pod-high", 256, "coal-heavy", 620.0),
-    PodSpec("pod-medium", 256, "cn-average", 530.0),
-    PodSpec("pod-green", 256, "hydro-rich", 380.0),
-]
-TERMS = RooflineTerms(0.010, 0.004, 0.002)   # a 10 ms inference step
+from repro.tenancy import (TenantPolicy, TenantRegistry, TenantSpec,
+                           TenantTask)
 
 # -- multi-tenant budgets -----------------------------------------------------
-router = GreenRouter(PODS, mode="performance")
-router.seed_profile({p.name: TERMS for p in PODS})
-br = BudgetedRouter(router)
-br.register_tenant("tenant-a", allowance_g=1.0)     # tight budget
-br.register_tenant("tenant-b", allowance_g=50.0)    # generous
-
-print("tenant-a requests as its budget drains:")
-for i in range(12):
-    res = br.admit("tenant-a", TERMS)
-    if res.admitted:
-        br.commit("tenant-a", res.pod, TERMS)
-    if i % 3 == 0 or not res.admitted:
-        b = br.tenants["tenant-a"]
-        print(f"  req {i:2d}: mode={res.mode:12s} pod={res.pod} "
-              f"admitted={res.admitted} spent={b.spent_g:.3f}/{b.allowance_g:.1f} g")
-    if not res.admitted:
-        break
-
-res_b = br.admit("tenant-b", TERMS)
-print(f"tenant-b unaffected: mode={res_b.mode}, admitted={res_b.admitted}\n")
-
-# -- temporal shifting --------------------------------------------------------
 cluster = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
 cluster.profile(250.0)
+
+registry = TenantRegistry([
+    TenantSpec("tenant-a", allowance_g=0.03, period_hours=1.0),   # tight
+    TenantSpec("tenant-b", allowance_g=5.0, period_hours=1.0),    # generous
+])
+policy = TenantPolicy(registry=registry)
+engine = CarbonEdgeEngine(cluster, mode="performance", policy=policy)
+
+print("tenant-a requests as its budget drains (one engine step each):")
+for i in range(10):
+    engine.submit(TenantTask(cpu=0.05, mem_mb=16.0, base_latency_ms=250.0,
+                             tenant="tenant-a"))
+    mode = policy.effective_modes()["tenant-a"]
+    results = engine.step(now_hour=0.0)
+    kind, val = engine.last_outcomes[0]
+    b = registry.report()["tenant-a"]
+    node = results[0].node if results else "-"
+    print(f"  req {i:2d}: mode={mode:12s} node={node:11s} outcome={kind:6s} "
+          f"spent={b['spent_g']:.4f}/{b['allowance_g']:.2f} g")
+    if kind == "defer":
+        print(f"          -> parked until hour {val:g} "
+              "(tenant-a's next accounting period)")
+        break
+
+engine.submit(TenantTask(cpu=0.05, mem_mb=16.0, tenant="tenant-b"))
+engine.step(now_hour=0.0)
+kind, _ = engine.last_outcomes[0]
+print(f"tenant-b unaffected: outcome={kind}, "
+      f"spent={registry.report()['tenant-b']['spent_g']:.4f} g")
+
+# deferred work resumes automatically once the period rolls over
+rep = engine.run_until(2.0, start_hour=0.0)
+a = rep["tenants"]["tenant-a"]
+print(f"after run_until(2.0): tenant-a completed={a['completed']} "
+      f"deferred={a['deferred']} (fresh period budget: "
+      f"{a['spent_g']:.4f}/{a['allowance_g']:.2f} g)\n")
+
+# -- temporal shifting --------------------------------------------------------
+cluster2 = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
+cluster2.profile(250.0)
 traces = {
     "node-high": synthetic_trace("coal-heavy", 620.0, solar_dip=0.1),
     "node-medium": synthetic_trace("cn-average", 530.0, solar_dip=0.3),
     "node-green": synthetic_trace("hydro-rich", 380.0, solar_dip=0.5),
 }
-sched = TemporalScheduler(cluster, traces, MODES["green"])
+sched = TemporalScheduler(cluster2, traces, MODES["green"])
 print("evening batch job (19:00) with increasing deadline slack:")
 for deadline in (0.0, 4.0, 16.0):
     t = DeferrableTask(cpu=0.05, mem_mb=16, deadline_hours=deadline,

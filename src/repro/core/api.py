@@ -351,8 +351,27 @@ class CarbonEdgeEngine:
             from repro.core.policy import VectorizedPolicy
             policy = VectorizedPolicy()
         self.policy = policy
+        # Multi-tenant admission protocol (DESIGN.md §7): a policy exposing
+        # plan()/charge() (e.g. repro.tenancy.TenantPolicy) gets per-task
+        # admit/defer/reject decisions applied before selection, and
+        # executed carbon charged back per tenant.
+        self._tenancy = (policy if callable(getattr(policy, "plan", None))
+                         and callable(getattr(policy, "charge", None))
+                         else None)
         self.batch_size = batch_size
         self.queue: List[Task] = []
+        # Budget-deferred tasks parked until their tenant's next accounting
+        # period: (wake_hour, task) in decision order. Drained by
+        # pop_ripe() (the sim driver) or automatically by run_until().
+        self.deferred: List[tuple] = []
+        # Per-drained-task outcomes of the last step(), for drivers that
+        # must track rejected/deferred work: a list of
+        # ("done", TaskResult) | ("reject", reason) | ("defer", wake_hour)
+        # in drained order — or None, meaning every drained task produced
+        # a TaskResult in order (the tenancy-free fast path pays no
+        # per-task Python to say so). After a step that raised, entries
+        # cover the consumed tasks and None marks requeued ones.
+        self.last_outcomes: Optional[List[tuple]] = None
         self.monitor = monitor or CarbonMonitor(provider=self.provider)
         if self.monitor.provider is None:
             # Caller-supplied provider-less monitor: adopt the engine's
@@ -403,11 +422,14 @@ class CarbonEdgeEngine:
         overrides ``batch_size`` for this call (partial drain — the sim
         driver steps exactly the tasks whose arrival events have fired).
         """
+        self.last_outcomes = None
         if not self.queue:
             return []
         b = limit if limit is not None else (self.batch_size or len(self.queue))
         batch, self.queue = self.queue[:b], self.queue[b:]
         results: List[TaskResult] = []
+        if self._tenancy is not None:
+            return self._step_tenancy(batch, now_hour, results)
         try:
             choices = self.policy.select_batch(
                 self.cluster, batch, self.weights, provider=self.provider,
@@ -423,6 +445,92 @@ class CarbonEdgeEngine:
             self.queue = list(batch[len(results):]) + self.queue
             raise
         return results
+
+    def _step_tenancy(self, batch: Sequence[Task], now_hour: float,
+                      results: List[TaskResult]) -> List[TaskResult]:
+        """Admission-controlled step (DESIGN.md §7): the tenant policy
+        plans admit/defer/reject for the drained batch, rejected tasks
+        are dropped (counted in the registry), deferred tasks park on
+        ``self.deferred`` until their wake hour, and only the admitted
+        subset is placed (mode-escalated), executed and billed — with the
+        executed prefix's carbon charged back per tenant even when the
+        batch fails mid-way."""
+        try:
+            plan = self.policy.plan(self.cluster, batch,
+                                    provider=self.provider,
+                                    now_hour=now_hour)
+        except BaseException:
+            # admission itself failed (e.g. a partial-coverage provider
+            # KeyError): nothing was consumed, so the whole batch requeues
+            # — the same never-silently-lost invariant as the
+            # tenancy-free path
+            self.queue = list(batch) + self.queue
+            raise
+        outcomes: List[tuple] = [None] * len(batch)
+        if plan.all_admitted:
+            aidx = None
+            exec_tasks: Sequence[Task] = batch
+        else:
+            from repro.tenancy.policy import DEFER as _DEFER
+            from repro.tenancy.policy import REJECT as _REJECT
+            aidx = plan.admitted_index()
+            exec_tasks = [batch[i] for i in aidx]
+            for i in np.nonzero(plan.actions == _REJECT)[0]:
+                outcomes[i] = ("reject", "carbon budget exhausted")
+            for i in np.nonzero(plan.actions == _DEFER)[0]:
+                w = float(plan.wake_hour[i])
+                self.deferred.append((w, batch[i]))
+                outcomes[i] = ("defer", w)
+        try:
+            full = self.policy.select_admitted(
+                self.cluster, batch, plan, self.weights,
+                provider=self.provider, now_hour=now_hour)
+            choices = (full if aidx is None
+                       else [full[i] for i in aidx])
+            if self.batch_execute:
+                self._execute_batched(exec_tasks, choices, now_hour, results)
+            else:
+                self._execute_scalar(exec_tasks, choices, now_hour, results)
+        except BaseException:
+            requeued = list(exec_tasks[len(results):])
+            self.queue = requeued + self.queue
+            if requeued:
+                # requeued tasks get re-planned (and re-counted) on the
+                # retry, so reverse this plan's admitted counting for them
+                tid = (plan.tenant_idx if aidx is None
+                       else plan.tenant_idx[aidx])[len(results):]
+                self.policy.registry.uncount_admitted(tid)
+            raise
+        finally:
+            # charge exactly the executed prefix — on a mid-batch failure
+            # that is the same set the cluster/monitor ledgers billed
+            if results:
+                tid = (plan.tenant_idx if aidx is None
+                       else plan.tenant_idx[aidx])[:len(results)]
+                self.policy.charge(tid, [r.carbon_g for r in results],
+                                   now_hour)
+            # publish verdicts even when execution raised mid-batch:
+            # rejected/deferred tasks were consumed, so a caller tracking
+            # per-request state must still see them; None marks the
+            # requeued admitted tail
+            pos = range(len(batch)) if aidx is None else aidx
+            for j, res in zip(pos, results):
+                outcomes[j] = ("done", res)
+            self.last_outcomes = outcomes
+        return results
+
+    def pop_ripe(self, now_hour: float) -> List[Task]:
+        """Remove and return budget-deferred tasks whose wake hour has
+        arrived, in park order — the caller resubmits them (the sim
+        driver does this on its tenancy DEFER_WAKE event;
+        :meth:`run_until` does it automatically)."""
+        if not self.deferred:
+            return []
+        ripe = [t for w, t in self.deferred if w <= now_hour]
+        if ripe:
+            self.deferred = [(w, t) for w, t in self.deferred
+                             if w > now_hour]
+        return ripe
 
     def _execute_scalar(self, batch: Sequence[Task],
                         choices: Sequence[Optional[str]], now_hour: float,
@@ -577,6 +685,16 @@ class CarbonEdgeEngine:
             self.submit_many([task] * iterations)
         while self.queue:
             self.step(now_hour)
+        if self.deferred:
+            # run() freezes the clock, so budget-deferred work can never
+            # reach its wake hour here — tell the caller instead of
+            # silently dropping it (run_until()/pop_ripe() resume it)
+            warnings.warn(
+                f"CarbonEdgeEngine.run left {len(self.deferred)} "
+                "budget-deferred task(s) parked: the frozen now_hour "
+                "never reaches their accounting-period wake; use "
+                "run_until() or pop_ripe() to resume them",
+                RuntimeWarning, stacklevel=2)
         return self.report()
 
     def run_until(self, end_hour: float, *, start_hour: float = 0.0,
@@ -594,9 +712,19 @@ class CarbonEdgeEngine:
         event-driven :class:`repro.sim.AsyncEngineDriver`.
         """
         now = start_hour
-        while self.queue and now < end_hour:
+        while now < end_hour:
+            self.queue[:0] = self.pop_ripe(now)
+            if not self.queue:
+                # idle but budget-deferred work exists: jump the clock to
+                # the earliest wake inside the window
+                wakes = [w for w, _ in self.deferred if w < end_hour]
+                if not wakes:
+                    break
+                now = max(now, min(wakes))
+                continue
+            qlen = len(self.queue)
             results = self.step(now, limit=limit)
-            if not results:
+            if not results and len(self.queue) >= qlen:
                 # zero-size limit or a step that drained nothing: no
                 # progress is possible, bail instead of spinning forever
                 break
@@ -607,9 +735,12 @@ class CarbonEdgeEngine:
 
     # -- reporting ---------------------------------------------------------
     def report(self) -> Dict:
-        return {
+        rep = {
             "totals": self.cluster.totals(),
             "distribution": self.cluster.distribution(),
             "policy": self.policy.name,
             "per_region": self.monitor.report(),
         }
+        if self._tenancy is not None:
+            rep["tenants"] = self._tenancy.registry.report()
+        return rep

@@ -1,30 +1,74 @@
-"""Multi-tenant carbon budgets — paper §V future work
-("multi-tenant optimization with carbon budgets").
+"""Multi-tenant carbon budgets — deprecated shim over ``repro.tenancy``.
 
-Each tenant holds a periodic carbon allowance; the BudgetedRouter admits a
-request only if the tenant's remaining budget covers the cheapest feasible
-placement's expected emissions, charges actual emissions on commit, and
-escalates a tenant's effective mode (performance -> balanced -> green) as
-its budget depletes, so heavy users are pushed toward low-carbon placements
-before being throttled.
+The real subsystem lives in :mod:`repro.tenancy` (DESIGN.md §7):
+:class:`~repro.tenancy.TenantPolicy` expresses what this module's
+``BudgetedRouter`` did by swapping router weights — budget-pressure mode
+escalation, admission control and a greenest-placement fallback — as a
+composable, batched policy wrapper the engine and the closed-loop sim
+share. ``BudgetedRouter`` survives as a thin, deprecation-warning shim
+whose decisions are produced by that policy (the parity test in
+tests/test_tenancy.py pins them bit-exactly to the original semantics).
+
+The shim also fixes the original's period-rollover accounting bug: with a
+finite ``period_hours``, escalation thresholds are evaluated against the
+*current* period's spend only (``TenantRegistry.roll``), not the lifetime
+total.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+import numpy as np
+
+from repro.core import energy
 from repro.core.energy import RooflineTerms
 from repro.core.router import GreenRouter
-from repro.core.scheduler import MODES, Task
+from repro.core.scheduler import Task
+from repro.tenancy import (ADMIT, MODE_ORDER, TenantPolicy, TenantRegistry,
+                           TenantSpec, TenantTask)
+
+# Budget-pressure escalation thresholds (fraction of allowance spent) —
+# re-exported for callers that imported the ladder from here; the live
+# definition is repro.tenancy.spec.ESCALATION_BOUNDS.
+_ESCALATION = ((0.5, "performance"), (0.8, "balanced"), (1.01, "green"))
 
 
-@dataclass
 class TenantBudget:
-    tenant: str
-    allowance_g: float                   # per accounting period
-    spent_g: float = 0.0
-    denied: int = 0
-    admitted: int = 0
+    """Per-tenant budget view over a :class:`TenantRegistry` slot.
+
+    Keeps the original dataclass's *read* API, with ``spent_g`` also
+    writable (tests and operators poke it directly); the counters are
+    read-only views and the state lives in the registry's vectorized
+    columns. Construct via ``BudgetedRouter.register_tenant``, not
+    directly.
+    """
+
+    def __init__(self, registry: TenantRegistry, tenant: str):
+        self._registry = registry
+        self._i = registry.index[tenant]
+        self.tenant = tenant
+
+    @property
+    def allowance_g(self) -> float:
+        return float(self._registry.allowance_g[self._i])
+
+    @property
+    def spent_g(self) -> float:
+        return float(self._registry.spent_g[self._i])
+
+    @spent_g.setter
+    def spent_g(self, value: float) -> None:
+        self._registry.spent_g[self._i] = value
+
+    @property
+    def admitted(self) -> int:
+        return int(self._registry.admitted[self._i])
+
+    @property
+    def denied(self) -> int:
+        return int(self._registry.rejected[self._i])
 
     @property
     def remaining_g(self) -> float:
@@ -32,11 +76,8 @@ class TenantBudget:
 
     @property
     def utilisation(self) -> float:
-        return self.spent_g / self.allowance_g if self.allowance_g else 1.0
-
-
-# Budget-pressure escalation thresholds (fraction of allowance spent).
-_ESCALATION = ((0.5, "performance"), (0.8, "balanced"), (1.01, "green"))
+        return (self.spent_g / self.allowance_g if self.allowance_g
+                else 1.0)
 
 
 @dataclass
@@ -49,55 +90,80 @@ class AdmissionResult:
 
 
 class BudgetedRouter:
-    """GreenRouter + per-tenant carbon accounting and admission control."""
+    """GreenRouter + per-tenant carbon accounting and admission control.
+
+    .. deprecated:: use :class:`repro.tenancy.TenantPolicy` with a
+       :class:`~repro.core.api.CarbonEdgeEngine` (or any router) — this
+       shim forwards every decision to that policy.
+    """
 
     def __init__(self, router: GreenRouter):
+        warnings.warn(
+            "BudgetedRouter is deprecated: wrap your scheduling policy in "
+            "repro.tenancy.TenantPolicy instead (DESIGN.md §7)",
+            DeprecationWarning, stacklevel=2)
         self.router = router
+        self.registry = TenantRegistry()
         self.tenants: Dict[str, TenantBudget] = {}
+        self._terms: Optional[RooflineTerms] = None
+        self.policy = TenantPolicy(inner=router.policy,
+                                   registry=self.registry,
+                                   energy_model=self._roofline_energy)
 
-    def register_tenant(self, tenant: str, allowance_g: float):
-        self.tenants[tenant] = TenantBudget(tenant, allowance_g)
+    def register_tenant(self, tenant: str, allowance_g: float,
+                        period_hours: float = float("inf")):
+        self.registry.register(TenantSpec(
+            tenant, allowance_g=allowance_g, period_hours=period_hours,
+            mode="performance", defer_over_reject=False))
+        self.tenants[tenant] = TenantBudget(self.registry, tenant)
 
-    def _mode_for(self, b: TenantBudget) -> str:
-        for frac, mode in _ESCALATION:
-            if b.utilisation < frac:
-                return mode
-        return "green"
+    # -- the original's expected-carbon model -------------------------------
+    def _roofline_energy(self, cluster, tasks, names) -> np.ndarray:
+        """Step energy per pod from the admit() call's roofline terms —
+        node-dependent (chips x chip power), shape (B, N)."""
+        t = self._terms
+        if t is None:
+            return np.zeros((len(tasks), len(names)))
+        e = np.array([energy.step_energy_kwh(t, self.router.pods[n].chips,
+                                             self.router.pods[n].chip_power_w)
+                      for n in names])
+        return np.broadcast_to(e, (len(tasks), e.size))
 
     def _expected_carbon(self, pod_name: str, terms: RooflineTerms) -> float:
         pod = self.router.pods[pod_name]
-        from repro.core import energy
-
         e = energy.step_energy_kwh(terms, pod.chips, pod.chip_power_w)
         return energy.carbon_g(e, pod.carbon_intensity)
 
     def admit(self, tenant: str, terms: RooflineTerms,
-              task: Optional[Task] = None) -> AdmissionResult:
-        b = self.tenants[tenant]
-        mode = self._mode_for(b)
-        prev = self.router.weights
-        self.router.weights = MODES[mode]
-        try:
-            pod = self.router.route(task)
-        finally:
-            self.router.weights = prev
-        expected = self._expected_carbon(pod, terms)
-        if expected > b.remaining_g:
-            # try the absolute greenest feasible pod before denying
-            greenest = min(self.router.pods.values(),
-                           key=lambda p: p.carbon_intensity)
-            expected_g = self._expected_carbon(greenest.name, terms)
-            if expected_g > b.remaining_g:
-                b.denied += 1
-                return AdmissionResult(False, None, mode, expected_g,
-                                       "carbon budget exhausted")
-            pod, expected = greenest.name, expected_g
-        b.admitted += 1
-        return AdmissionResult(True, pod, mode, expected)
+              task: Optional[Task] = None,
+              hour: float = 0.0) -> AdmissionResult:
+        self.tenants[tenant]                 # unknown tenant: KeyError
+        self._terms = terms
+        t = task or Task(cpu=0.0, mem_mb=0.0)
+        tt = TenantTask(cpu=t.cpu, mem_mb=t.mem_mb,
+                        base_latency_ms=t.base_latency_ms, tenant=tenant)
+        plan = self.policy.plan(self.router.cluster, [tt],
+                                provider=self.router.provider, now_hour=hour)
+        mode = (MODE_ORDER[plan.modes[0]] if plan.modes[0] >= 0
+                else "green")
+        if plan.actions[0] != ADMIT:
+            return AdmissionResult(False, None, mode,
+                                   float(plan.expected_g[0]),
+                                   "carbon budget exhausted")
+        choices = self.policy.select_admitted(
+            self.router.cluster, [tt], plan, self.router.weights,
+            provider=self.router.provider, now_hour=hour)
+        pod = choices[0]
+        if pod is None:
+            raise RuntimeError("no feasible pod")
+        return AdmissionResult(True, pod, mode,
+                               self._expected_carbon(pod, terms))
 
-    def commit(self, tenant: str, pod: str, terms: RooflineTerms) -> float:
-        carbon = self.router.commit(pod, terms)
-        self.tenants[tenant].spent_g += carbon
+    def commit(self, tenant: str, pod: str, terms: RooflineTerms,
+               hour: float = 0.0) -> float:
+        carbon = self.router.commit(pod, terms, hour=hour)
+        self.policy.charge(np.array([self.registry.index[tenant]]),
+                           np.array([carbon]), now_hour=hour)
         return carbon
 
     def report(self) -> Dict[str, Dict[str, float]]:

@@ -4,7 +4,8 @@ Drives the engine/serving stack through simulated time: seeded arrival
 processes -> event heap -> batched ``CarbonEdgeEngine.step`` calls with an
 advancing ``now_hour`` -> queueing/SLO/carbon metrics.
 """
-from repro.sim.arrivals import (ArrivalProcess, ConstantRateArrivals,
+from repro.sim.arrivals import (ArrivalProcess, ClientPopulation,
+                                ClosedLoopClientPool, ConstantRateArrivals,
                                 DiurnalArrivals, MMPPArrivals,
                                 PoissonArrivals, TraceReplayArrivals)
 from repro.sim.clock import VirtualClock, hours_to_s, ms_to_hours, s_to_hours
@@ -14,7 +15,8 @@ from repro.sim.metrics import (MetricsCollector, TaskRecord, TimelineSample,
                                WAIT_HIST_EDGES_S)
 
 __all__ = [
-    "ArrivalProcess", "ConstantRateArrivals", "DiurnalArrivals",
+    "ArrivalProcess", "ClientPopulation", "ClosedLoopClientPool",
+    "ConstantRateArrivals", "DiurnalArrivals",
     "MMPPArrivals", "PoissonArrivals", "TraceReplayArrivals",
     "VirtualClock", "hours_to_s", "ms_to_hours", "s_to_hours",
     "AsyncEngineDriver", "BatchExecutor",

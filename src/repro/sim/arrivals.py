@@ -22,7 +22,7 @@ dynamics drive the carbon savings available to a deferral policy):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Protocol, Sequence, Union, runtime_checkable
+from typing import Callable, List, Protocol, Sequence, Union, runtime_checkable
 
 import numpy as np
 
@@ -182,3 +182,121 @@ class TraceReplayArrivals:
     def times(self, t0_hours: float, horizon_hours: float) -> np.ndarray:
         ts = np.sort(np.asarray(self.arrival_hours, dtype=float))
         return ts[(ts >= t0_hours) & (ts < t0_hours + horizon_hours)]
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop clients (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ClientPopulation:
+    """A tenant's closed-loop client population.
+
+    Each of the ``n_clients`` clients cycles *think → request → wait for
+    completion → think*; demand therefore reacts to latency (a saturated
+    executor slows completions, which throttles the offered load — the
+    behaviour an open-loop arrival process cannot express). A completion
+    slower than ``slo_latency_s`` — or an admission rejection — makes the
+    client retry the request after a capped exponential backoff, and
+    abandon it (returning to think) after ``max_attempts`` total tries.
+    """
+
+    tenant: str
+    n_clients: int
+    mean_think_hours: float = 0.01
+    slo_latency_s: float = float("inf")
+    max_attempts: int = 3
+    backoff_base_hours: float = 0.002
+    backoff_cap_hours: float = 0.05
+    priority: int = 0        # same-instant seeding order (higher first)
+
+
+class ClosedLoopClientPool:
+    """Per-tenant closed-loop client populations driving CLIENT_READY /
+    RETRY events (DESIGN.md §7).
+
+    Determinism contract: all think-time draws come from one
+    ``np.random.Generator`` consumed in event-processing order, which the
+    event heap makes a pure function of the scenario — so two same-seed
+    runs (and the batched vs scalar execute paths, which produce
+    identical completions) replay identical client behaviour.
+    """
+
+    def __init__(self, populations: Sequence[ClientPopulation], seed: int = 0):
+        self.populations = list(populations)
+        self._rng = np.random.default_rng(seed)
+        self._pop: List[ClientPopulation] = []   # per client
+        self._attempts: List[int] = []           # per client, current request
+        for p in self.populations:
+            for _ in range(p.n_clients):
+                self._pop.append(p)
+                self._attempts.append(0)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self._pop)
+
+    def tenant_of(self, client_id: int) -> str:
+        return self._pop[client_id].tenant
+
+    def _think(self, client_id: int) -> float:
+        return float(self._rng.exponential(
+            self._pop[client_id].mean_think_hours))
+
+    def _backoff(self, client_id: int) -> float:
+        p = self._pop[client_id]
+        tries = max(self._attempts[client_id] - 1, 0)
+        return min(p.backoff_base_hours * (2.0 ** tries),
+                   p.backoff_cap_hours)
+
+    def initial_events(self, start_hour: float) -> List:
+        """(hour, client_id) first-request times, staggered uniformly over
+        each client's mean think time. Sorted by (hour, -priority,
+        client_id) so same-instant requests enqueue higher-priority
+        tenants first — the only scheduling effect of ``priority``."""
+        out = []
+        for cid in range(self.n_clients):
+            p = self._pop[cid]
+            at = start_hour + float(self._rng.uniform(0, p.mean_think_hours))
+            out.append((at, cid))
+        out.sort(key=lambda e: (e[0], -self._pop[e[1]].priority, e[1]))
+        return out
+
+    def on_ready(self, client_id: int) -> str:
+        """The client issues a request; returns its tenant name."""
+        if self._attempts[client_id] == 0:
+            self._attempts[client_id] = 1
+        return self.tenant_of(client_id)
+
+    def on_complete(self, client_id: int, latency_s: float,
+                    now_hour: float):
+        """Request finished with end-to-end ``latency_s``. Returns
+        ``(verdict, next_hour)``: ``"ok"``/``"abandon"`` schedule the next
+        CLIENT_READY after think time; ``"retry"`` schedules a RETRY after
+        backoff."""
+        p = self._pop[client_id]
+        if latency_s <= p.slo_latency_s:
+            self._attempts[client_id] = 0
+            return "ok", now_hour + self._think(client_id)
+        return self._failed(client_id, now_hour)
+
+    def on_reject(self, client_id: int, now_hour: float):
+        """Admission control rejected the request — same retry/abandon
+        ladder as an SLO miss."""
+        return self._failed(client_id, now_hour)
+
+    def give_up(self, client_id: int) -> None:
+        """Drop the client's in-flight request without a further retry
+        (the driver calls this when a retry lands past the sim horizon,
+        counting the abandon itself)."""
+        self._attempts[client_id] = 0
+
+    def _failed(self, client_id: int, now_hour: float):
+        p = self._pop[client_id]
+        if self._attempts[client_id] >= p.max_attempts:
+            self._attempts[client_id] = 0
+            return "abandon", now_hour + self._think(client_id)
+        back = self._backoff(client_id)
+        self._attempts[client_id] += 1
+        return "retry", now_hour + back

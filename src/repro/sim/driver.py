@@ -40,7 +40,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Protocol, Sequence, runtime_checkable
 
-from repro.sim.arrivals import ArrivalProcess
+from repro.sim.arrivals import ArrivalProcess, ClosedLoopClientPool
 from repro.sim.clock import VirtualClock, hours_to_s, ms_to_hours, s_to_hours
 from repro.sim.events import EventHeap, EventKind
 from repro.sim.metrics import MetricsCollector, TaskRecord, TimelineSample
@@ -61,6 +61,8 @@ class _Pending:
     uid: int
     submit_hour: float
     deferred_hours: float = 0.0
+    tenant: str = ""
+    client: Optional[int] = None     # closed-loop client id, if any
 
 
 class AsyncEngineDriver:
@@ -74,13 +76,18 @@ class AsyncEngineDriver:
     minimum-forecast-intensity slot within their deadline.
     """
 
-    def __init__(self, executor: BatchExecutor, arrivals: ArrivalProcess,
-                 task_factory: Callable[[int, float], object], *,
+    def __init__(self, executor: BatchExecutor,
+                 arrivals: Optional[ArrivalProcess],
+                 task_factory: Callable[..., object], *,
                  start_hour: float = 0.0, horizon_hours: float = 1.0,
                  max_batch: int = 8, batch_window_hours: float = 0.0,
                  forecast=None, slot_hours: float = 0.5,
                  slo_latency_s: Optional[float] = None,
-                 tick_hours: float = 0.0):
+                 tick_hours: float = 0.0,
+                 clients: Optional[ClosedLoopClientPool] = None):
+        if arrivals is None and clients is None:
+            raise ValueError("need an arrival process, a closed-loop "
+                             "client pool, or both")
         self.executor = executor
         self.arrivals = arrivals
         self.task_factory = task_factory
@@ -91,10 +98,18 @@ class AsyncEngineDriver:
         self.forecast = forecast
         self.slot_hours = slot_hours
         self.tick_hours = tick_hours
+        # Closed-loop mode (DESIGN.md §7): `clients` drives CLIENT_READY /
+        # RETRY events and the task_factory is called as
+        # factory(uid, hour, tenant) — for EVERY task source, so mixing an
+        # open-loop arrival process with client populations keeps one
+        # factory signature (ARRIVAL events pass tenant=""). New requests
+        # stop at the horizon; in-flight ones drain.
+        self.clients = clients
         self.clock = VirtualClock(start_hour)
         self.heap = EventHeap()
         self.metrics = MetricsCollector(slo_latency_s=slo_latency_s)
         self._pending: List[_Pending] = []   # FIFO, mirrors executor queue
+        self._parked: List[tuple] = []       # budget-deferred (wake, _Pending)
         self._flush_scheduled = False
         self._busy_until = start_hour
         self._uid = 0
@@ -114,14 +129,16 @@ class AsyncEngineDriver:
 
     # -- event handlers ------------------------------------------------------
     def _enqueue(self, uid: int, task, submit_hour: float,
-                 deferred_hours: float, now: float) -> None:
+                 deferred_hours: float, now: float,
+                 client: Optional[int] = None) -> None:
         # Keep the executor's own clock on sim time: a serving Request
         # not pre-stamped by the factory would otherwise get a *wall*
         # submission stamp and mix clocks in Completion.wait_s.
         if hasattr(task, "submitted_s") and task.submitted_s is None:
             task.submitted_s = hours_to_s(submit_hour)
         self.executor.submit(task)
-        self._pending.append(_Pending(uid, submit_hour, deferred_hours))
+        self._pending.append(_Pending(uid, submit_hour, deferred_hours,
+                                      getattr(task, "tenant", ""), client))
         if len(self._pending) >= self.max_batch:
             # Flush immediately, even past an already-scheduled window
             # flush — the later event then drains whatever is pending (or
@@ -139,13 +156,86 @@ class AsyncEngineDriver:
     def _on_arrival(self, now: float) -> None:
         self._uid += 1
         uid = self._uid
-        task = self.task_factory(uid, now)
+        # one factory arity per driver: 3-arg whenever a client pool is
+        # attached (open-loop arrivals are the untenanted source)
+        task = (self.task_factory(uid, now) if self.clients is None
+                else self.task_factory(uid, now, ""))
         wake = self._plan(task, now)
         if wake > now + 1e-12:
             self.heap.push(wake, EventKind.DEFER_WAKE,
                            payload=(uid, task, now, wake - now))
         else:
             self._enqueue(uid, task, now, 0.0, now)
+
+    def _on_client_ready(self, client_id: int, now: float,
+                         retry: bool = False) -> None:
+        """A closed-loop client issues its next request (first try or
+        retry). Clients stop issuing new requests at the horizon so the
+        event loop drains; in-flight work completes normally. A *retry*
+        that lands past the horizon is a request that dies with the sim —
+        it counts as abandoned rather than silently vanishing."""
+        if now >= self.start_hour + self.horizon_hours:
+            if retry:
+                self.metrics.count_abandoned(
+                    self.clients.tenant_of(client_id))
+                self.clients.give_up(client_id)
+            return
+        self._uid += 1
+        uid = self._uid
+        tenant = self.clients.on_ready(client_id)
+        task = self.task_factory(uid, now, tenant)
+        self._enqueue(uid, task, now, 0.0, now, client=client_id)
+
+    def _client_verdict(self, client_id: int, verdict: str,
+                        at_hour: float, tenant: str) -> None:
+        """Translate a pool verdict into the next client event + counters."""
+        if verdict == "retry":
+            self.metrics.count_retry(tenant)
+            self.heap.push(at_hour, EventKind.RETRY, payload=client_id)
+        else:
+            if verdict == "abandon":
+                self.metrics.count_abandoned(tenant)
+            self.heap.push(at_hour, EventKind.CLIENT_READY,
+                           payload=client_id)
+
+    def _on_tenancy_wake(self, now: float) -> None:
+        """A budget-deferred task's next accounting period arrived: pop
+        every ripe task off the executor's parking lot and re-enqueue it,
+        matching our parked pending entries by the same wake filter in
+        park order (both sides are FIFO over identical wake hours)."""
+        pop = getattr(self.executor, "pop_ripe", None)
+        if pop is None:
+            return
+        ripe = pop(now)
+        if not ripe:
+            return
+        take, rest = [], []
+        for entry in self._parked:
+            if entry[0] <= now and len(take) < len(ripe):
+                take.append(entry)
+            else:
+                rest.append(entry)
+        self._parked = rest
+        # Tasks the ENGINE parked before this driver attached (direct
+        # engine.step use, or a reused engine) have no parked record of
+        # ours; they precede our own in the lot's FIFO, so the unmatched
+        # head is exactly them — adopt each with a fresh uid at the wake.
+        extra = len(ripe) - len(take)
+        for task in ripe[:extra]:
+            self._uid += 1
+            self.executor.submit(task)
+            self._pending.append(_Pending(self._uid, now, 0.0,
+                                          getattr(task, "tenant", ""),
+                                          None))
+        for task, (wake, parked_at, p) in zip(ripe[extra:], take):
+            self.executor.submit(task)
+            p.deferred_hours += now - parked_at
+            self._pending.append(p)
+        if len(self._pending) >= self.max_batch:
+            self.heap.push(now, EventKind.BATCH_READY)
+            self._flush_scheduled = True
+        else:
+            self._schedule_flush(now + self.batch_window_hours)
 
     def _monitor(self):
         """The executor's CarbonMonitor: directly on a CarbonEdgeEngine,
@@ -157,16 +247,40 @@ class AsyncEngineDriver:
         return m
 
     def _record_batch(self, results: Sequence, exec_hour: float,
-                      batch_energy_kwh: Optional[float] = None) -> float:
+                      batch_energy_kwh: Optional[float] = None,
+                      outcomes: Optional[Sequence] = None) -> float:
         """Emit TaskRecords for ``results`` against the pending FIFO head;
         returns the hour the executor frees up. ``batch_energy_kwh``
         (the monitor's delta across the step) backfills executors whose
         results carry no per-task energy, apportioned evenly like their
-        per-batch carbon."""
-        done, free = self._pending[:len(results)], exec_hour
-        self._pending = self._pending[len(results):]
+        per-batch carbon.
+
+        ``outcomes`` (an admission-controlled executor's
+        ``last_outcomes``, DESIGN.md §7) maps the drained FIFO prefix to
+        per-task verdicts: completions are recorded as before, rejections
+        are counted (and fed back to the closed-loop client, which
+        retries or abandons), deferrals park the pending entry until the
+        executor's wake event. ``None`` means every drained task
+        completed in order — the pre-tenancy contract.
+        """
+        if outcomes is None:
+            outcomes = [("done", r) for r in results]
+        done, free = self._pending[:len(outcomes)], exec_hour
+        self._pending = self._pending[len(outcomes):]
+        pool = self.clients
         t = exec_hour
-        for p, res in zip(done, results):
+        for p, (kind, val) in zip(done, outcomes):
+            if kind == "reject":
+                self.metrics.count_rejected(p.tenant)
+                if pool is not None and p.client is not None:
+                    verdict, at = pool.on_reject(p.client, exec_hour)
+                    self._client_verdict(p.client, verdict, at, p.tenant)
+                continue
+            if kind == "defer":
+                self._parked.append((val, exec_hour, p))
+                self.heap.push(val, EventKind.DEFER_WAKE, payload=None)
+                continue
+            res = val
             if hasattr(res, "latency_ms"):        # serial cluster result
                 t += ms_to_hours(res.latency_ms)
                 finish = t
@@ -178,13 +292,18 @@ class AsyncEngineDriver:
             if energy is None:
                 energy = (batch_energy_kwh / len(results)
                           if batch_energy_kwh is not None else 0.0)
-            self.metrics.add(TaskRecord(
+            rec = TaskRecord(
                 uid=p.uid, submit_hour=p.submit_hour, start_hour=exec_hour,
                 finish_hour=finish,
                 node=getattr(res, "node", getattr(res, "pod", "")),
                 carbon_g=getattr(res, "carbon_g", 0.0),
                 energy_kwh=energy,
-                deferred_hours=p.deferred_hours))
+                deferred_hours=p.deferred_hours, tenant=p.tenant)
+            self.metrics.add(rec)
+            if pool is not None and p.client is not None:
+                verdict, at = pool.on_complete(p.client, rec.latency_s,
+                                               finish)
+                self._client_verdict(p.client, verdict, at, p.tenant)
         return free
 
     def _on_batch_ready(self, now: float) -> None:
@@ -200,7 +319,8 @@ class AsyncEngineDriver:
         results = self.executor.step(now_hour=now, limit=n)
         e_batch = (monitor.total_energy_kwh() - e0
                    if monitor is not None else None)
-        self._busy_until = self._record_batch(results, now, e_batch)
+        outcomes = getattr(self.executor, "last_outcomes", None)
+        self._busy_until = self._record_batch(results, now, e_batch, outcomes)
         if self._pending:
             self._schedule_flush(max(self._busy_until,
                                      now + self.batch_window_hours))
@@ -241,8 +361,29 @@ class AsyncEngineDriver:
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> MetricsCollector:
-        for t in self.arrivals.times(self.start_hour, self.horizon_hours):
-            self.heap.push(float(t), EventKind.ARRIVAL)
+        if self.arrivals is not None:
+            for t in self.arrivals.times(self.start_hour, self.horizon_hours):
+                self.heap.push(float(t), EventKind.ARRIVAL)
+        if self.clients is not None:
+            for at, cid in self.clients.initial_events(self.start_hour):
+                self.heap.push(at, EventKind.CLIENT_READY, payload=cid)
+            # advertise per-tenant SLO classes to the metrics layer
+            for pop in self.clients.populations:
+                if pop.slo_latency_s != float("inf"):
+                    self.metrics.tenant_slo_s[pop.tenant] = pop.slo_latency_s
+        # the executor's tenant registry (if any) supplies spec-level SLO
+        # classes: latency targets (client populations take precedence)
+        # and miss tolerances
+        reg = getattr(getattr(self.executor, "policy", None),
+                      "registry", None)
+        if reg is not None and hasattr(reg, "miss_tolerance"):
+            for name, i in reg.index.items():
+                if reg.slo_latency_s[i] != float("inf"):
+                    self.metrics.tenant_slo_s.setdefault(
+                        name, float(reg.slo_latency_s[i]))
+                if reg.miss_tolerance[i] > 0:
+                    self.metrics.tenant_miss_tolerance[name] = float(
+                        reg.miss_tolerance[i])
         if self.tick_hours > 0:
             n_ticks = int(self.horizon_hours / self.tick_hours)
             for k in range(1, n_ticks + 1):
@@ -253,9 +394,16 @@ class AsyncEngineDriver:
             now = self.clock.advance_to(ev.time_hours)
             if ev.kind is EventKind.ARRIVAL:
                 self._on_arrival(now)
+            elif (ev.kind is EventKind.CLIENT_READY
+                  or ev.kind is EventKind.RETRY):
+                self._on_client_ready(ev.payload, now,
+                                      retry=ev.kind is EventKind.RETRY)
             elif ev.kind is EventKind.DEFER_WAKE:
-                uid, task, submit_hour, deferred = ev.payload
-                self._enqueue(uid, task, submit_hour, deferred, now)
+                if ev.payload is None:            # budget-deferred wake
+                    self._on_tenancy_wake(now)
+                else:                             # forecast-planned wake
+                    uid, task, submit_hour, deferred = ev.payload
+                    self._enqueue(uid, task, submit_hour, deferred, now)
             elif ev.kind is EventKind.BATCH_READY:
                 self._on_batch_ready(now)
             elif ev.kind is EventKind.INTENSITY_TICK:

@@ -1,10 +1,18 @@
 """Event model for the discrete-event simulator (DESIGN.md §2).
 
-Four event kinds drive the serving loop:
+Six event kinds drive the serving loop:
 
-- ``ARRIVAL``        — a request enters the system (payload: the task);
+- ``ARRIVAL``        — an open-loop request enters the system;
+- ``CLIENT_READY``   — a closed-loop client's think time elapsed: it
+  issues its next request (payload: client id, DESIGN.md §7);
+- ``RETRY``          — a closed-loop client re-issues a request that
+  missed its SLO or was rejected by admission control, after backoff
+  (payload: client id);
 - ``BATCH_READY``    — the driver should drain a batch through the engine;
-- ``DEFER_WAKE``     — a deferred task's planned green slot has arrived;
+- ``DEFER_WAKE``     — a deferred task's planned green slot (payload: the
+  parked task tuple) or a budget-deferred tenant's next accounting
+  period (payload ``None`` — the driver polls ``engine.pop_ripe``)
+  has arrived;
 - ``INTENSITY_TICK`` — periodic sample point for the carbon/latency timeline.
 
 Determinism contract: events are totally ordered by
@@ -23,6 +31,8 @@ from typing import Any, List, Optional
 
 class EventKind(Enum):
     ARRIVAL = "arrival"
+    CLIENT_READY = "client_ready"
+    RETRY = "retry"
     BATCH_READY = "batch_ready"
     DEFER_WAKE = "defer_wake"
     INTENSITY_TICK = "intensity_tick"

@@ -35,6 +35,7 @@ class TaskRecord:
     carbon_g: float
     energy_kwh: float
     deferred_hours: float = 0.0  # planned wake delay (0 = ran immediately)
+    tenant: str = ""             # "" = untenanted (single-workload sims)
 
     @property
     def wait_s(self) -> float:
@@ -67,6 +68,18 @@ class MetricsCollector:
     records: List[TaskRecord] = field(default_factory=list)
     timeline: List[TimelineSample] = field(default_factory=list)
     deferred_tasks: int = 0
+    # Per-tenant SLO classes (DESIGN.md §7): a tenant's violations are
+    # counted against its own class's latency target when present, the
+    # collector-wide slo_latency_s otherwise, and its objective is *met*
+    # while the violation rate stays within the class's miss tolerance.
+    # The *global* SLO metrics always use slo_latency_s only, so
+    # untenanted reports are byte-identical to pre-tenancy ones.
+    tenant_slo_s: Dict[str, float] = field(default_factory=dict)
+    tenant_miss_tolerance: Dict[str, float] = field(default_factory=dict)
+    # Closed-loop / admission counters, keyed by tenant ("" = untenanted).
+    rejected: Dict[str, int] = field(default_factory=dict)
+    abandoned: Dict[str, int] = field(default_factory=dict)
+    retries: Dict[str, int] = field(default_factory=dict)
 
     def add(self, rec: TaskRecord) -> None:
         self.records.append(rec)
@@ -75,6 +88,15 @@ class MetricsCollector:
 
     def add_sample(self, s: TimelineSample) -> None:
         self.timeline.append(s)
+
+    def count_rejected(self, tenant: str = "") -> None:
+        self.rejected[tenant] = self.rejected.get(tenant, 0) + 1
+
+    def count_abandoned(self, tenant: str = "") -> None:
+        self.abandoned[tenant] = self.abandoned.get(tenant, 0) + 1
+
+    def count_retry(self, tenant: str = "") -> None:
+        self.retries[tenant] = self.retries.get(tenant, 0) + 1
 
     # -- reductions ---------------------------------------------------------
     def wait_histogram(self) -> List[int]:
@@ -106,6 +128,55 @@ class MetricsCollector:
             "wait_histogram": self.wait_histogram(),
         }
 
+    # -- per-tenant reductions (DESIGN.md §7) -------------------------------
+    def _tenant_groups(self) -> Dict[str, List[TaskRecord]]:
+        """Records grouped per tenant in one pass (names with only
+        counter activity get an empty group)."""
+        groups: Dict[str, List[TaskRecord]] = {}
+        for r in self.records:
+            if r.tenant:
+                groups.setdefault(r.tenant, []).append(r)
+        for name in (set(self.rejected) | set(self.abandoned)
+                     | set(self.retries)):
+            if name:
+                groups.setdefault(name, [])
+        return groups
+
+    def tenant_names(self) -> List[str]:
+        return sorted(self._tenant_groups())
+
+    def tenant_summary(self) -> Dict[str, Dict]:
+        """Per-tenant SLO attainment (vs the tenant's own SLO class,
+        including its miss tolerance), admission/abandon rates and carbon
+        breakdown. Empty for untenanted sims (so their reports stay
+        byte-identical to the pre-tenancy format)."""
+        out: Dict[str, Dict] = {}
+        for name, recs in sorted(self._tenant_groups().items()):
+            lats = np.array([r.latency_s for r in recs])
+            slo = self.tenant_slo_s.get(name, self.slo_latency_s)
+            viol = int(np.sum(lats > slo)) if slo is not None else 0
+            n = len(recs)
+            rej = self.rejected.get(name, 0)
+            attain = 1.0 - viol / n if n else 1.0
+            tol = self.tenant_miss_tolerance.get(name, 0.0)
+            out[name] = {
+                "completed": n,
+                "carbon_g": float(sum(r.carbon_g for r in recs)),
+                "energy_kwh": float(sum(r.energy_kwh for r in recs)),
+                "latency_s_p95": _pct(lats, 95),
+                "slo_latency_s": slo,
+                "slo_violations": viol,
+                "slo_attainment": attain,
+                "slo_miss_tolerance": tol,
+                "slo_met": (1.0 - attain) <= tol + 1e-12,
+                "rejected": rej,
+                "admission_rate": n / (n + rej) if (n + rej) else 1.0,
+                "abandoned": self.abandoned.get(name, 0),
+                "retries": self.retries.get(name, 0),
+                "deferred": sum(1 for r in recs if r.deferred_hours > 0),
+            }
+        return out
+
     # -- deterministic rendering --------------------------------------------
     def to_text(self) -> str:
         """Canonical report: one ``%.9g``-formatted line per metric, per
@@ -121,13 +192,23 @@ class MetricsCollector:
                 lines.append(f"{k}=[{','.join(str(x) for x in v)}]")
             else:
                 lines.append(f"{k}={v}")
+        for name, t in sorted(self.tenant_summary().items()):
+            lines.append(
+                f"tenant {name} completed={t['completed']} "
+                f"carbon_g={t['carbon_g']:.9g} "
+                f"slo_attainment={t['slo_attainment']:.9g} "
+                f"slo_met={t['slo_met']} "
+                f"rejected={t['rejected']} abandoned={t['abandoned']} "
+                f"retries={t['retries']} deferred={t['deferred']}")
         for t in self.timeline:
             lines.append(f"tick hour={t.hour:.9g} completed={t.completed} "
                          f"carbon_g={t.carbon_g_cum:.9g} "
                          f"intensity={t.mean_intensity:.9g}")
         for r in self.records:
+            tenant = f" tenant={r.tenant}" if r.tenant else ""
             lines.append(
                 f"task uid={r.uid} node={r.node} submit={r.submit_hour:.9g} "
                 f"start={r.start_hour:.9g} finish={r.finish_hour:.9g} "
-                f"carbon_g={r.carbon_g:.9g} deferred_h={r.deferred_hours:.9g}")
+                f"carbon_g={r.carbon_g:.9g} "
+                f"deferred_h={r.deferred_hours:.9g}{tenant}")
         return "\n".join(lines) + "\n"

@@ -1,0 +1,23 @@
+"""Multi-tenant workload subsystem (DESIGN.md §7).
+
+Tenant contracts (SLO class, periodic carbon allowance, mode preference),
+a vectorized shared :class:`TenantRegistry`, and :class:`TenantPolicy` —
+budget-aware admission control and mode escalation as a composable
+wrapper around any scheduling policy. The engine
+(:class:`~repro.core.api.CarbonEdgeEngine`) detects the policy's
+``plan``/``charge`` hooks and applies per-task admit/defer/reject
+decisions before selection; the sim's closed-loop clients
+(:class:`~repro.sim.arrivals.ClosedLoopClientPool`) react to the
+resulting latency, rejections and deferrals.
+"""
+from repro.tenancy.policy import (ADMIT, DEFER, REJECT, AdmissionPlan,
+                                  TenantPolicy, cluster_energy_model)
+from repro.tenancy.spec import (ESCALATION_BOUNDS, MODE_ORDER, SLOClass,
+                                TenantRegistry, TenantSpec, TenantTask)
+
+__all__ = [
+    "ADMIT", "DEFER", "REJECT", "AdmissionPlan", "TenantPolicy",
+    "cluster_energy_model",
+    "ESCALATION_BOUNDS", "MODE_ORDER", "SLOClass", "TenantRegistry",
+    "TenantSpec", "TenantTask",
+]

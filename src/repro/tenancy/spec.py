@@ -1,0 +1,250 @@
+"""Tenant model for multi-tenant serving (DESIGN.md §7).
+
+The paper evaluates one anonymous workload; real edge deployments serve
+many tenants whose SLO classes, carbon allowances and mode preferences
+differ (Ecomap's multi-tenant DNN execution, arXiv 2503.04148). This
+module holds the *data* half of the tenancy subsystem:
+
+- :class:`TenantSpec` — immutable per-tenant contract: SLO class (latency
+  target + miss tolerance), a periodic carbon allowance, a preferred
+  operating mode (the escalation *floor*), a priority and whether
+  over-budget work is deferred to the next period or rejected outright;
+- :class:`TenantTask` — a :class:`~repro.core.scheduler.Task` tagged with
+  its tenant (the engine, policies and sim all resolve tenancy through
+  ``getattr(task, "tenant", ...)``, so plain Tasks keep working);
+- :class:`TenantRegistry` — the shared mutable state: per-tenant
+  **column arrays** (allowance, current-period spend, counters), so the
+  batched scheduling fast path (PR 3/4) stays O(distinct tenants), not
+  O(B), per step. The engine and the sim driver share one registry.
+
+Accounting periods are anchored at hour 0: tenant ``i`` is in period
+``floor(now_hour / period_hours[i])``. :meth:`TenantRegistry.roll` resets
+``spent_g`` when a tenant crosses into a new period, so escalation
+thresholds are always evaluated against the *current* period's spend only
+(lifetime totals live in ``total_carbon_g``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence
+
+import numpy as np
+
+from repro.core.energy import ledger_add
+from repro.core.scheduler import Task
+
+# Escalation ladder: budget pressure only ever pushes a tenant *toward*
+# green (a tenant's preferred mode is the floor, never the ceiling).
+MODE_ORDER = ("performance", "balanced", "green")
+
+# Budget-pressure escalation boundaries (fraction of the current period's
+# allowance spent): < 0.5 -> performance, < 0.8 -> balanced, else green.
+# Same ladder the deprecated BudgetedRouter used (core/budget.py).
+ESCALATION_BOUNDS = (0.5, 0.8)
+
+
+@dataclass(frozen=True)
+class SLOClass:
+    """Latency service-level objective: a target and the fraction of
+    requests allowed to miss it before the tenant's SLO is considered
+    violated (closed-loop clients retry on a per-request miss regardless;
+    the tolerance is the *reporting* threshold)."""
+
+    latency_s: float = float("inf")
+    miss_tolerance: float = 0.0
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    name: str
+    allowance_g: float = float("inf")     # carbon allowance per period
+    period_hours: float = float("inf")    # inf -> one everlasting period
+    slo: SLOClass = SLOClass()
+    mode: str = "performance"             # preferred mode (escalation floor)
+    priority: int = 0                     # client seeding order tie-break
+    defer_over_reject: bool = True        # park over-budget work for the
+    #                                       next period instead of rejecting
+
+    def __post_init__(self):
+        if self.mode not in MODE_ORDER:
+            raise ValueError(f"unknown mode {self.mode!r}; "
+                             f"choose from {MODE_ORDER}")
+        if self.allowance_g < 0:
+            raise ValueError("allowance_g must be >= 0")
+        if self.period_hours <= 0:
+            raise ValueError("period_hours must be > 0")
+
+
+@dataclass(frozen=True)
+class TenantTask(Task):
+    """A schedulable task tagged with its tenant. Untagged tasks (or an
+    empty tenant) pass through admission unconditionally with the
+    engine's default weights."""
+
+    tenant: str = ""
+
+
+class TenantRegistry:
+    """Vectorized per-tenant state shared by engine, policy and sim.
+
+    Static columns come from the specs at registration; the mutable
+    columns (``spent_g``, ``period_idx``, counters) are updated in bulk by
+    :meth:`roll` / :meth:`charge` — one numpy op or one Python iteration
+    per *distinct* tenant, never per task. Registration is setup-time
+    (columns are rebuilt per register call); the hot path only reads.
+    """
+
+    def __init__(self, specs: Iterable[TenantSpec] = ()):
+        self.specs: Dict[str, TenantSpec] = {}
+        self.index: Dict[str, int] = {}
+        self.names: List[str] = []
+        self._rebuild_static()
+        for col in ("spent_g", "total_carbon_g", "peak_spent_g"):
+            setattr(self, col, np.zeros(0))
+        for col in ("period_idx", "completed", "admitted", "rejected",
+                    "deferred"):
+            setattr(self, col, np.zeros(0, np.int64))
+        for s in specs:
+            self.register(s)
+
+    # -- registration ------------------------------------------------------
+    def _rebuild_static(self) -> None:
+        specs = [self.specs[n] for n in self.names]
+        self.allowance_g = np.array([s.allowance_g for s in specs])
+        self.period_hours = np.array([s.period_hours for s in specs])
+        self.priority = np.array([s.priority for s in specs], dtype=np.int64)
+        self.slo_latency_s = np.array([s.slo.latency_s for s in specs])
+        self.miss_tolerance = np.array([s.slo.miss_tolerance for s in specs])
+        self.mode_floor = np.array([MODE_ORDER.index(s.mode) for s in specs],
+                                   dtype=np.int8)
+        self.defer_ok = np.array([s.defer_over_reject for s in specs],
+                                 dtype=bool)
+
+    def register(self, spec: TenantSpec) -> TenantSpec:
+        if spec.name in self.index:
+            raise ValueError(f"tenant {spec.name!r} already registered")
+        self.specs[spec.name] = spec
+        self.index[spec.name] = len(self.names)
+        self.names.append(spec.name)
+        self._rebuild_static()
+        for col in ("spent_g", "total_carbon_g", "peak_spent_g",
+                    "period_idx", "completed", "admitted", "rejected",
+                    "deferred"):
+            arr = getattr(self, col)
+            setattr(self, col, np.append(arr, arr.dtype.type(0)))
+        return spec
+
+    @property
+    def n(self) -> int:
+        return len(self.names)
+
+    # -- task resolution ---------------------------------------------------
+    def ids(self, tasks: Sequence) -> np.ndarray:
+        """(B,) registry index per task; -1 for untagged/unknown tenants
+        (admitted unconditionally, default weights)."""
+        idx = self.index
+        return np.array([idx.get(getattr(t, "tenant", ""), -1)
+                         for t in tasks], dtype=np.int64)
+
+    # -- accounting periods ------------------------------------------------
+    def roll(self, now_hour: float) -> None:
+        """Advance tenants whose accounting period boundary has passed:
+        reset the current-period spend (escalation thresholds must see the
+        *current* period only — the rollover bug the shimmed
+        BudgetedRouter had). Lifetime totals are untouched."""
+        if not self.n:
+            return
+        finite = np.isfinite(self.period_hours)
+        if not finite.any():
+            return
+        idx = np.zeros(self.n, dtype=np.int64)
+        ph = self.period_hours[finite]
+        div = np.floor(now_hour / ph).astype(np.int64)
+        # Deferral wakes are computed by MULTIPLICATION ((k+1) * period,
+        # next_period_start); float division can land an ulp short of that
+        # boundary (0.29 / 0.01 -> 28.999…), which would leave a woken
+        # task in its exhausted period forever. Align the two arithmetics:
+        # a tenant is in period k+1 once (k+1) * period <= now.
+        div += ((div + 1) * ph <= now_hour)
+        idx[finite] = div
+        fresh = idx > self.period_idx
+        if fresh.any():
+            self.spent_g[fresh] = 0.0
+            self.period_idx[fresh] = idx[fresh]
+
+    def next_period_start(self) -> np.ndarray:
+        """(T,) hour each tenant's next period begins (inf for everlasting
+        periods — such tenants can never be deferred into fresh budget)."""
+        return (self.period_idx + 1) * self.period_hours
+
+    # -- spend -------------------------------------------------------------
+    def remaining_g(self) -> np.ndarray:
+        return np.maximum(self.allowance_g - self.spent_g, 0.0)
+
+    def utilisation(self) -> np.ndarray:
+        """(T,) fraction of the current period's allowance spent (1.0 for a
+        zero allowance — always maximally escalated)."""
+        out = np.ones(self.n)
+        pos = self.allowance_g > 0
+        np.divide(self.spent_g, self.allowance_g, out=out, where=pos)
+        return out
+
+    def charge(self, tenant_idx: np.ndarray, carbon_g: np.ndarray) -> None:
+        """Bill executed carbon to tenants: one ledger fold per *distinct*
+        tenant, with each tenant's values accumulated in task order via
+        :func:`~repro.core.energy.ledger_add` — bit-identical to a scalar
+        ``spent += c`` loop (the same contract the cluster/monitor batched
+        ledgers honour, DESIGN.md §6). Entries with index -1 (untagged
+        tasks) are skipped."""
+        tid = np.asarray(tenant_idx, dtype=np.int64).reshape(-1)
+        c = np.asarray(carbon_g, dtype=float).reshape(-1)
+        valid = tid >= 0
+        if not valid.any():
+            return
+        tid, c = tid[valid], c[valid]
+        order = np.argsort(tid, kind="stable")
+        ts, cs = tid[order], c[order]
+        uniq, starts = np.unique(ts, return_index=True)
+        bounds = np.append(starts, ts.size)
+        for k, u in enumerate(uniq):
+            seg = cs[bounds[k]:bounds[k + 1]]
+            self.spent_g[u] = ledger_add(self.spent_g[u], seg)
+            self.total_carbon_g[u] = ledger_add(self.total_carbon_g[u], seg)
+            self.completed[u] += seg.size
+            # lifetime max of any single period's spend — the observable
+            # the admission invariant (spend <= allowance, up to one
+            # task's float noise) is asserted against
+            if self.spent_g[u] > self.peak_spent_g[u]:
+                self.peak_spent_g[u] = self.spent_g[u]
+
+    def uncount_admitted(self, tenant_idx: np.ndarray) -> None:
+        """Reverse :meth:`plan`'s admitted counting for tasks that were
+        requeued by a mid-batch failure — they will be re-planned (and
+        re-counted) when the caller retries the step, so without this the
+        admission counters would inflate per retry."""
+        tid = np.asarray(tenant_idx, dtype=np.int64).reshape(-1)
+        tid = tid[tid >= 0]
+        if tid.size:
+            np.add.at(self.admitted, tid, -1)
+
+    # -- reporting ---------------------------------------------------------
+    def report(self) -> Dict[str, Dict[str, float]]:
+        util = self.utilisation()
+        rem = self.remaining_g()
+        return {
+            name: {
+                "allowance_g": float(self.allowance_g[i]),
+                "period_hours": float(self.period_hours[i]),
+                "period_idx": int(self.period_idx[i]),
+                "spent_g": float(self.spent_g[i]),
+                "remaining_g": float(rem[i]),
+                "utilisation": float(util[i]),
+                "peak_spent_g": float(self.peak_spent_g[i]),
+                "total_carbon_g": float(self.total_carbon_g[i]),
+                "completed": int(self.completed[i]),
+                "admitted": int(self.admitted[i]),
+                "rejected": int(self.rejected[i]),
+                "deferred": int(self.deferred[i]),
+            }
+            for name, i in self.index.items()
+        }

@@ -1,0 +1,605 @@
+"""Multi-tenant subsystem (repro.tenancy, DESIGN.md §7).
+
+Covers: registry column semantics (registration, period rollover, ledger
+charging), vectorized escalation parity with the scalar ladder, admission
+plan semantics (prefix cut, defer-vs-reject, infeasible passthrough),
+engine integration (outcomes, deferral parking/resume, batched-vs-scalar
+charge parity, mid-batch failure prefix charging), the period-rollover
+regression (escalation must see the current period's spend only), the
+BudgetedRouter shim's bit-exact parity with the pre-shim implementation
+(re-created inline as the oracle), and an allowance-invariant fuzz: no
+tenant's single-period spend ever exceeds its allowance by more than one
+task's worth of carbon.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import energy
+from repro.core.api import CarbonEdgeEngine, NoFeasibleNodeError
+from repro.core.cluster import EdgeCluster, PAPER_NODES
+from repro.core.energy import RooflineTerms
+from repro.core.router import GreenRouter, PodSpec
+from repro.core.scheduler import MODES, Task
+from repro.tenancy import (ADMIT, DEFER, REJECT, MODE_ORDER, SLOClass,
+                           TenantPolicy, TenantRegistry, TenantSpec,
+                           TenantTask)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional extra: pip install -e .[test]
+    HAVE_HYPOTHESIS = False
+
+
+def fresh_cluster():
+    c = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
+    c.profile(250.0)
+    return c
+
+
+def task_g(cluster, node="node-green", base_ms=250.0):
+    """Exact carbon one task bills on `node` (greenest by default)."""
+    _, e = cluster.latency_energy(np.array([base_ms]))
+    return float(e[0] * cluster.nodes[node].spec.carbon_intensity
+                 * cluster.pue)
+
+
+def tenant_engine(specs, batch_execute=True, mode="green"):
+    c = fresh_cluster()
+    reg = TenantRegistry(specs)
+    eng = CarbonEdgeEngine(c, mode=mode, policy=TenantPolicy(registry=reg),
+                           batch_execute=batch_execute)
+    return eng, reg
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_register_and_ids():
+    reg = TenantRegistry([TenantSpec("a", allowance_g=1.0),
+                          TenantSpec("b", mode="green", priority=3)])
+    assert reg.n == 2 and reg.names == ["a", "b"]
+    assert reg.mode_floor.tolist() == [0, 2]
+    tasks = [TenantTask(tenant="b"), Task(), TenantTask(tenant="zz")]
+    assert reg.ids(tasks).tolist() == [1, -1, -1]
+    with pytest.raises(ValueError):
+        reg.register(TenantSpec("a"))
+    with pytest.raises(ValueError):
+        TenantSpec("x", mode="turbo")
+    with pytest.raises(ValueError):
+        TenantSpec("x", period_hours=0.0)
+
+
+def test_registry_roll_resets_current_period_only():
+    reg = TenantRegistry([TenantSpec("a", allowance_g=1.0, period_hours=2.0),
+                          TenantSpec("b", allowance_g=1.0)])  # everlasting
+    reg.charge(np.array([0, 1]), np.array([0.4, 0.6]))
+    assert reg.spent_g.tolist() == [0.4, 0.6]
+    reg.roll(1.9)                      # still period 0
+    assert reg.spent_g.tolist() == [0.4, 0.6]
+    reg.roll(2.0)                      # boundary: period 1 begins
+    assert reg.spent_g.tolist() == [0.0, 0.6]      # inf period never rolls
+    assert reg.period_idx.tolist() == [1, 0]
+    assert reg.total_carbon_g.tolist() == [0.4, 0.6]
+    assert reg.peak_spent_g.tolist() == [0.4, 0.6]
+    assert reg.next_period_start()[0] == 4.0
+
+
+def test_roll_aligns_with_wake_hours_across_float_boundaries():
+    """roll() must consider the period rolled at exactly the hour
+    next_period_start() hands out as the deferral wake — float division
+    lands an ulp short of the multiplied boundary for many (k, period)
+    pairs (e.g. 0.29 / 0.01 -> 28.999…), which used to strand woken
+    tasks in their exhausted period forever."""
+    for period in (0.01, 0.02, 0.07, 0.3):
+        reg = TenantRegistry([TenantSpec("a", allowance_g=1.0,
+                                         period_hours=period)])
+        for k in range(1, 120):
+            reg.spent_g[0] = 0.5
+            wake = float(reg.next_period_start()[0])
+            reg.roll(wake)
+            assert int(reg.period_idx[0]) == k, (period, k, wake)
+            assert reg.spent_g[0] == 0.0
+
+
+def test_run_until_resumes_across_float_period_boundary():
+    """End-to-end regression for the wake/roll float mismatch: a task
+    deferred out of an exhausted period 28 (period_hours=0.01) must run
+    in period 29, not re-defer to the same hour forever."""
+    eng, reg = tenant_engine([TenantSpec("a", allowance_g=0.007,
+                                         period_hours=0.01)])
+    reg.period_idx[0] = 28
+    reg.spent_g[0] = 0.007             # period 28 exhausted
+    eng.submit(TenantTask(cpu=0.05, mem_mb=16.0, tenant="a"))
+    rep = eng.run_until(0.4, start_hour=0.285)
+    assert rep["tenants"]["a"]["completed"] == 1
+    assert not eng.deferred and not eng.queue
+
+
+def test_registry_charge_matches_scalar_fold():
+    reg = TenantRegistry([TenantSpec("a"), TenantSpec("b")])
+    rng = np.random.default_rng(5)
+    carbons = rng.uniform(0.0, 0.3, 64)
+    tids = rng.integers(-1, 2, 64)
+    reg.charge(tids, carbons)
+    want_a = want_b = 0.0
+    for t, c in zip(tids, carbons):
+        if t == 0:
+            want_a += c
+        elif t == 1:
+            want_b += c
+    assert reg.spent_g[0] == want_a and reg.spent_g[1] == want_b
+    assert reg.completed.tolist() == [int(np.sum(tids == 0)),
+                                      int(np.sum(tids == 1))]
+
+
+def test_escalation_matches_scalar_ladder():
+    reg = TenantRegistry([TenantSpec("a"), TenantSpec("g", mode="green")])
+    pol = TenantPolicy(registry=reg)
+
+    def scalar_mode(util):             # the BudgetedRouter ladder, verbatim
+        for frac, mode in ((0.5, "performance"), (0.8, "balanced"),
+                           (1.01, "green")):
+            if util < frac:
+                return mode
+        return "green"
+
+    utils = np.r_[np.random.default_rng(0).uniform(0, 1.4, 200),
+                  [0.0, 0.5, 0.8, 1.0, 1.01]]
+    modes = pol._modes_from_util(utils, np.zeros(utils.size, np.int64))
+    for u, m in zip(utils, modes):
+        assert MODE_ORDER[m] == scalar_mode(u)
+    # the green-preference tenant is floored at green regardless of util
+    floored = pol._modes_from_util(np.array([0.0]), np.array([1]))
+    assert MODE_ORDER[floored[0]] == "green"
+
+
+# ---------------------------------------------------------------------------
+# admission plan semantics
+# ---------------------------------------------------------------------------
+
+
+def test_plan_prefix_cut_and_wake():
+    eng, reg = tenant_engine(
+        [TenantSpec("a", allowance_g=1.0, period_hours=2.0)])
+    c = eng.cluster
+    g = task_g(c)
+    reg.spent_g[0] = 1.0 - 2.5 * g     # room for exactly 2 more greenest
+    pol = eng.policy
+    tasks = [TenantTask(cpu=0.05, mem_mb=16.0, tenant="a")
+             for _ in range(5)]
+    plan = pol.plan(c, tasks, provider=eng.provider, now_hour=0.0)
+    assert plan.actions.tolist() == [ADMIT, ADMIT, DEFER, DEFER, DEFER]
+    assert np.all(plan.wake_hour[2:] == 2.0)
+    assert reg.admitted[0] == 2 and reg.deferred[0] == 3
+
+
+def test_plan_rejects_when_defer_cannot_help():
+    # task pricier than the whole allowance, and a reject-only tenant
+    eng, reg = tenant_engine(
+        [TenantSpec("tiny", allowance_g=1e-9, period_hours=1.0),
+         TenantSpec("strict", allowance_g=1e-9, period_hours=1.0,
+                    defer_over_reject=False)])
+    reg.spent_g[:] = 1e-9
+    pol = eng.policy
+    plan = pol.plan(eng.cluster,
+                    [TenantTask(cpu=0.05, mem_mb=16.0, tenant="tiny"),
+                     TenantTask(cpu=0.05, mem_mb=16.0, tenant="strict")],
+                    provider=eng.provider)
+    assert plan.actions.tolist() == [REJECT, REJECT]
+
+
+def test_plan_untagged_and_infeasible_pass_through():
+    eng, _ = tenant_engine([TenantSpec("a", allowance_g=0.0,
+                                       period_hours=1.0,
+                                       defer_over_reject=False)])
+    huge = TenantTask(cpu=1e9, mem_mb=1e9, tenant="a")   # feasible nowhere
+    plain = Task(cpu=0.05, mem_mb=16.0)
+    plan = eng.policy.plan(eng.cluster, [huge, plain],
+                           provider=eng.provider)
+    assert plan.actions.tolist() == [ADMIT, ADMIT]
+    assert plan.expected_g[0] == 0.0 and plan.greenest[0] == -1
+    assert plan.modes[1] == -1         # untagged -> engine default weights
+
+
+def test_in_batch_mode_escalation():
+    # a batch big enough to walk one tenant across both thresholds
+    eng, reg = tenant_engine([TenantSpec("a", allowance_g=1.0,
+                                         period_hours=10.0)])
+    c = eng.cluster
+    g = task_g(c)
+    n = int(1.0 / g) + 1
+    tasks = [TenantTask(cpu=0.05, mem_mb=16.0, tenant="a")
+             for _ in range(n)]
+    plan = eng.policy.plan(c, tasks, provider=eng.provider)
+    util = np.cumsum(np.r_[0.0, plan.expected_g[:-1]])
+    stages = np.searchsorted([0.5, 0.8], util, side="right")
+    adm = plan.actions == ADMIT
+    assert (plan.modes[adm] == stages[adm]).all()
+    assert {0, 1, 2} <= set(plan.modes[adm].tolist())
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def test_engine_outcomes_defer_resume_and_report():
+    eng, reg = tenant_engine(
+        [TenantSpec("a", allowance_g=0.03, period_hours=1.0),
+         TenantSpec("b")])
+    tasks = [TenantTask(cpu=0.05, mem_mb=16.0, tenant=t)
+             for t in ["a"] * 8 + ["b"] * 2]
+    eng.submit_many(tasks)
+    res = eng.step(now_hour=0.0)
+    kinds = [k for k, _ in eng.last_outcomes]
+    n_done = kinds.count("done")
+    assert n_done == len(res) and kinds.count("defer") == len(eng.deferred)
+    assert reg.spent_g[0] <= 0.03 + 1e-12
+    rep = eng.report()
+    assert rep["tenants"]["a"]["deferred"] == kinds.count("defer") > 0
+    # nothing ripe before the period boundary
+    assert eng.pop_ripe(0.5) == []
+    parked = len(eng.deferred)
+    rep2 = eng.run_until(3.0, start_hour=0.0)
+    assert not eng.deferred and not eng.queue
+    assert rep2["tenants"]["a"]["completed"] == 8
+    assert reg.peak_spent_g[0] <= 0.03 + 1e-12
+    assert parked > 0 and rep2["end_hour"] >= 1.0
+
+
+def test_engine_charge_parity_batched_vs_scalar():
+    def run(batch_execute):
+        eng, reg = tenant_engine(
+            [TenantSpec("a", allowance_g=0.05, period_hours=0.5),
+             TenantSpec("g", mode="green"), TenantSpec("s")],
+            batch_execute=batch_execute)
+        rng = np.random.default_rng(9)
+        tenants = ["a", "g", "s", ""]
+        for hour in (0.0, 0.2, 0.4, 0.6, 1.1):
+            eng.submit_many([
+                TenantTask(cpu=float(rng.uniform(0.0, 0.2)),
+                           mem_mb=float(rng.uniform(4.0, 64.0)),
+                           base_latency_ms=float(rng.uniform(50.0, 400.0)),
+                           tenant=tenants[int(rng.integers(0, 4))])
+                for _ in range(12)])
+            eng.step(now_hour=hour)
+        return ([(r.node, r.carbon_g) for r in eng.cluster.log],
+                reg.spent_g.tolist(), reg.total_carbon_g.tolist(),
+                reg.peak_spent_g.tolist(), reg.admitted.tolist(),
+                reg.deferred.tolist(), reg.rejected.tolist(),
+                reg.completed.tolist(),
+                [(w, t) for w, t in eng.deferred])
+
+    assert run(True) == run(False)
+
+
+def test_engine_mid_batch_failure_charges_prefix():
+    def run(batch_execute):
+        eng, reg = tenant_engine([TenantSpec("a", allowance_g=50.0,
+                                             period_hours=1.0)],
+                                 batch_execute=batch_execute)
+        good = TenantTask(cpu=0.05, mem_mb=16.0, tenant="a")
+        bad = TenantTask(cpu=1e9, mem_mb=1e9, tenant="a")  # infeasible
+        eng.submit_many([good, good, bad, good])
+        with pytest.raises(NoFeasibleNodeError) as ei:
+            eng.step(now_hour=0.0)
+        # two executed+charged, failing task + tail requeued
+        assert len(ei.value.executed) == 2
+        assert reg.completed[0] == 2 and reg.spent_g[0] > 0
+        assert len(eng.queue) == 2
+        return reg.spent_g.tolist(), [r.carbon_g for r in eng.cluster.log]
+
+    assert run(True) == run(False)
+
+
+def test_failure_retry_does_not_double_count_admissions():
+    """Requeued-then-retried tasks are re-planned; the admitted counter
+    must not inflate per retry."""
+    eng, reg = tenant_engine([TenantSpec("a", allowance_g=50.0,
+                                         period_hours=1.0)])
+    good = TenantTask(cpu=0.05, mem_mb=16.0, tenant="a")
+    bad = TenantTask(cpu=1e9, mem_mb=1e9, tenant="a")
+    eng.submit_many([good, bad, good])
+    for _ in range(3):                  # repeated retries all fail at `bad`
+        with pytest.raises(NoFeasibleNodeError):
+            eng.step(now_hour=0.0)
+        assert reg.admitted[0] == 1     # only the executed task counts
+    # drop the poison task; the retry then admits and executes the tail
+    assert eng.queue[0] is bad
+    eng.queue.pop(0)
+    eng.step(now_hour=0.0)
+    assert reg.admitted[0] == 2 and reg.completed[0] == 2
+
+
+def test_admission_failure_requeues_whole_batch():
+    """A provider failure DURING admission (before anything is consumed)
+    must requeue the entire batch — the tenancy-free path's
+    never-silently-lost invariant."""
+    class PartialProvider:
+        def intensity(self, node, hour=0.0):
+            if node == "node-green":
+                raise KeyError(node)
+            return 500.0
+
+    eng, _ = tenant_engine([TenantSpec("a", allowance_g=1.0,
+                                       period_hours=1.0)])
+    eng.provider = PartialProvider()
+    tasks = [TenantTask(cpu=0.05, mem_mb=16.0, tenant="a")
+             for _ in range(3)]
+    eng.submit_many(tasks)
+    with pytest.raises(KeyError):
+        eng.step(now_hour=0.0)
+    assert eng.queue == tasks and not eng.cluster.log
+
+
+def test_run_warns_when_deferred_work_stays_parked():
+    """run() freezes the clock, so budget-deferred tasks can never wake
+    inside it — it must say so instead of silently dropping them."""
+    eng, _ = tenant_engine([TenantSpec("a", allowance_g=0.01,
+                                       period_hours=1.0)])
+    tasks = [TenantTask(cpu=0.05, mem_mb=16.0, tenant="a")
+             for _ in range(5)]
+    with pytest.warns(RuntimeWarning, match="budget-deferred"):
+        rep = eng.run(tasks)
+    assert eng.deferred and rep["tenants"]["a"]["deferred"] > 0
+
+
+def test_failed_step_still_publishes_consumed_verdicts():
+    """A step that raises mid-batch must still surface reject/defer
+    verdicts for the tasks it consumed (they are in neither the queue
+    nor the results); None marks the requeued admitted tail."""
+    eng, reg = tenant_engine(
+        [TenantSpec("r", allowance_g=0.0, period_hours=1.0,
+                    defer_over_reject=False),
+         TenantSpec("a", allowance_g=50.0, period_hours=1.0)])
+    reg.spent_g[0] = 1.0               # r: always rejected
+    rej = TenantTask(cpu=0.05, mem_mb=16.0, tenant="r")
+    bad = TenantTask(cpu=1e9, mem_mb=1e9, tenant="a")
+    good = TenantTask(cpu=0.05, mem_mb=16.0, tenant="a")
+    eng.submit_many([rej, bad, good])
+    with pytest.raises(NoFeasibleNodeError):
+        eng.step(now_hour=0.0)
+    assert eng.last_outcomes[0] == ("reject", "carbon budget exhausted")
+    assert eng.last_outcomes[1] is None and eng.last_outcomes[2] is None
+    assert eng.queue == [bad, good]    # only admitted tasks requeue
+
+
+def test_rollover_regression_mid_batch_escalation():
+    """Escalation must see the CURRENT period's spend only: a batch
+    arriving after the boundary starts from a clean slate even though
+    the previous period nearly exhausted the allowance."""
+    eng, reg = tenant_engine([TenantSpec("a", allowance_g=0.05,
+                                         period_hours=1.0)])
+    g = task_g(eng.cluster)
+    t = TenantTask(cpu=0.05, mem_mb=16.0, tenant="a")
+    eng.submit_many([t] * int(0.05 / g))
+    eng.step(now_hour=0.9)                      # near-exhaust period 0
+    assert eng.policy.effective_modes()["a"] == "green"
+    stale_spend = reg.spent_g[0]
+    assert stale_spend > 0.8 * 0.05
+    # batch crossing the boundary: must be planned against fresh budget
+    eng.submit_many([t] * 3)
+    res = eng.step(now_hour=1.25)
+    assert len(res) == 3                        # nothing deferred/rejected
+    plan_modes = [k for k, _ in eng.last_outcomes]
+    assert plan_modes == ["done"] * 3
+    assert reg.period_idx[0] == 1
+    assert abs(reg.spent_g[0] - sum(r.carbon_g for r in res)) < 1e-15
+    assert eng.policy.effective_modes()["a"] == "performance"
+
+
+# ---------------------------------------------------------------------------
+# BudgetedRouter shim parity (bit-exact vs the pre-shim implementation)
+# ---------------------------------------------------------------------------
+
+PODS = [
+    PodSpec("pod-high", 256, "coal", 620.0),
+    PodSpec("pod-medium", 256, "cn", 530.0),
+    PodSpec("pod-green", 256, "hydro", 380.0),
+]
+TERMS = RooflineTerms(0.010, 0.004, 0.002)
+
+
+class OldBudgetedRouter:
+    """The pre-tenancy BudgetedRouter, verbatim — the parity oracle."""
+
+    _ESCALATION = ((0.5, "performance"), (0.8, "balanced"), (1.01, "green"))
+
+    def __init__(self, router):
+        self.router = router
+        self.tenants = {}   # name -> dict(allowance, spent, denied, admitted)
+
+    def register_tenant(self, tenant, allowance_g):
+        self.tenants[tenant] = {"allowance": allowance_g, "spent": 0.0,
+                                "denied": 0, "admitted": 0}
+
+    def _util(self, b):
+        return b["spent"] / b["allowance"] if b["allowance"] else 1.0
+
+    def _mode_for(self, b):
+        for frac, mode in self._ESCALATION:
+            if self._util(b) < frac:
+                return mode
+        return "green"
+
+    def _remaining(self, b):
+        return max(b["allowance"] - b["spent"], 0.0)
+
+    def _expected(self, pod_name, terms):
+        pod = self.router.pods[pod_name]
+        e = energy.step_energy_kwh(terms, pod.chips, pod.chip_power_w)
+        return energy.carbon_g(e, pod.carbon_intensity)
+
+    def admit(self, tenant, terms, task=None):
+        b = self.tenants[tenant]
+        mode = self._mode_for(b)
+        prev = self.router.weights
+        self.router.weights = MODES[mode]
+        try:
+            pod = self.router.route(task)
+        finally:
+            self.router.weights = prev
+        expected = self._expected(pod, terms)
+        if expected > self._remaining(b):
+            greenest = min(self.router.pods.values(),
+                           key=lambda p: p.carbon_intensity)
+            expected_g = self._expected(greenest.name, terms)
+            if expected_g > self._remaining(b):
+                b["denied"] += 1
+                return (False, None, mode, expected_g)
+            pod, expected = greenest.name, expected_g
+        b["admitted"] += 1
+        return (True, pod, mode, expected)
+
+    def commit(self, tenant, pod, terms):
+        carbon = self.router.commit(pod, terms)
+        self.tenants[tenant]["spent"] += carbon
+        return carbon
+
+
+def _mk_shim():
+    from repro.core.budget import BudgetedRouter
+
+    router = GreenRouter(PODS, mode="performance")
+    router.seed_profile({p.name: TERMS for p in PODS})
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        br = BudgetedRouter(router)
+    return br
+
+
+def _mk_old():
+    router = GreenRouter(PODS, mode="performance")
+    router.seed_profile({p.name: TERMS for p in PODS})
+    old = OldBudgetedRouter(router)
+    return old
+
+
+def test_budgeted_router_shim_parity_bit_exact():
+    """Drain two tenants through the shim and the verbatim pre-shim
+    implementation: every (admitted, pod, mode, expected) decision and
+    every spent/denied/admitted counter must match bit-exactly."""
+    shim, old = _mk_shim(), _mk_old()
+    for br in (shim, old):
+        br.register_tenant("a", 1.0)
+        br.register_tenant("b", 50.0)
+    rng = np.random.default_rng(17)
+    for step in range(40):
+        tenant = "a" if rng.uniform() < 0.7 else "b"
+        res_s = shim.admit(tenant, TERMS)
+        res_o = old.admit(tenant, TERMS)
+        assert (res_s.admitted, res_s.pod, res_s.mode) == res_o[:3], step
+        assert res_s.expected_carbon_g == res_o[3], step
+        if res_s.admitted:
+            c_s = shim.commit(tenant, res_s.pod, TERMS)
+            c_o = old.commit(tenant, res_o[1], TERMS)
+            assert c_s == c_o
+        for t in ("a", "b"):
+            assert shim.tenants[t].spent_g == old.tenants[t]["spent"]
+            assert shim.tenants[t].denied == old.tenants[t]["denied"]
+            assert shim.tenants[t].admitted == old.tenants[t]["admitted"]
+    # tenant a must have walked the full escalation ladder and been denied
+    assert old.tenants["a"]["denied"] > 0
+
+
+def test_budgeted_router_deprecation_and_views():
+    router = GreenRouter(PODS, mode="performance")
+    router.seed_profile({p.name: TERMS for p in PODS})
+    with pytest.warns(DeprecationWarning):
+        from repro.core.budget import BudgetedRouter
+        br = BudgetedRouter(router)
+    br.register_tenant("a", 10.0)
+    br.tenants["a"].spent_g = 8.5           # direct pokes write through
+    assert br.policy.registry.spent_g[0] == 8.5
+    res = br.admit("a", TERMS)
+    assert res.mode == "green" and res.pod == "pod-green"
+    rep = br.report()
+    assert rep["a"]["utilisation"] == 0.85
+    with pytest.raises(KeyError):
+        br.admit("nobody", TERMS)
+
+
+def test_budgeted_router_shim_period_rollover():
+    """The shim gains what the original lacked: with a finite period,
+    escalation is evaluated against the current period's spend only."""
+    br = _mk_shim()
+    br.register_tenant("a", 1.0, period_hours=1.0)
+    br.tenants["a"].spent_g = 0.9
+    assert br.admit("a", TERMS, hour=0.5).mode == "green"
+    res = br.admit("a", TERMS, hour=1.5)    # fresh period
+    assert res.mode == "performance" and res.admitted
+    assert br.tenants["a"].spent_g == 0.0
+
+
+# ---------------------------------------------------------------------------
+# allowance-invariant fuzz
+# ---------------------------------------------------------------------------
+
+
+def _run_allowance_example(allowances, periods, traffic_seed, n_steps):
+    specs = [TenantSpec(f"t{i}", allowance_g=a, period_hours=p,
+                        slo=SLOClass(latency_s=5.0))
+             for i, (a, p) in enumerate(zip(allowances, periods))]
+    eng, reg = tenant_engine(specs)
+    rng = np.random.default_rng(traffic_seed)
+    names = [s.name for s in specs] + [""]
+    max_task_g = 0.0
+    hour = 0.0
+    for _ in range(n_steps):
+        batch = []
+        for _ in range(int(rng.integers(1, 16))):
+            base = float(rng.uniform(20.0, 500.0))
+            batch.append(TenantTask(
+                cpu=float(rng.uniform(0.0, 0.3)),
+                mem_mb=float(rng.uniform(0.0, 128.0)),
+                base_latency_ms=base,
+                tenant=names[int(rng.integers(0, len(names)))]))
+            _, e = eng.cluster.latency_energy(np.array([base]))
+            worst_i = max(st.spec.carbon_intensity
+                          for st in eng.cluster.nodes.values())
+            max_task_g = max(max_task_g, float(e[0]) * worst_i)
+        eng.queue[:0] = eng.pop_ripe(hour)
+        eng.submit_many(batch)
+        eng.step(now_hour=hour)
+        capped = np.isfinite(reg.allowance_g)
+        assert np.all(reg.peak_spent_g[capped]
+                      <= reg.allowance_g[capped] + max_task_g + 1e-9), \
+            (reg.peak_spent_g, reg.allowance_g, max_task_g)
+        hour += float(rng.uniform(0.0, 0.4))
+
+
+def test_allowance_never_exceeded_seeded():
+    """Deterministic slice of the fuzz domain — runs without hypothesis."""
+    rng = np.random.default_rng(33)
+    for trial in range(15):
+        n = int(rng.integers(1, 5))
+        allowances = [float(rng.uniform(1e-4, 0.2)) for _ in range(n)]
+        periods = [float(rng.choice([0.25, 0.5, 1.0, np.inf]))
+                   for _ in range(n)]
+        _run_allowance_example(allowances, periods, trial, n_steps=8)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def tenant_mix(draw):
+        n = draw(st.integers(1, 4))
+        allowances = [draw(st.floats(1e-4, 0.2)) for _ in range(n)]
+        periods = [draw(st.sampled_from([0.25, 0.5, 1.0, float("inf")]))
+                   for _ in range(n)]
+        seed = draw(st.integers(0, 2 ** 16))
+        return allowances, periods, seed
+
+    @given(tenant_mix())
+    @settings(max_examples=40, deadline=None)
+    def test_hypothesis_allowance_never_exceeded(mix):
+        allowances, periods, seed = mix
+        _run_allowance_example(allowances, periods, seed, n_steps=6)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed — pip install .[test]")
+    def test_hypothesis_allowance_never_exceeded():
+        pass

@@ -1,0 +1,226 @@
+"""Closed-loop multi-tenant simulation (DESIGN.md §7).
+
+Covers: ClosedLoopClientPool mechanics (think/retry/backoff/abandon,
+priority-ordered seeding), the driver's outcome-aware recording (rejects
+fed back to clients, budget deferrals parked and resumed on the engine's
+wake), per-tenant metrics under the %.9g byte-identity contract —
+including byte-identical `to_text` across repeat runs and across the
+batched/scalar execute paths — and format compatibility: untenanted sims
+render exactly the pre-tenancy report shape.
+"""
+from repro.core.api import CarbonEdgeEngine
+from repro.core.cluster import EdgeCluster, PAPER_NODES
+from repro.core.scheduler import Task
+from repro.sim import (AsyncEngineDriver, ClientPopulation,
+                       ClosedLoopClientPool, ConstantRateArrivals)
+from repro.tenancy import (SLOClass, TenantPolicy, TenantRegistry,
+                           TenantSpec, TenantTask)
+
+BASE_MS = 250.0
+
+
+def factory(uid, hour, tenant):
+    return TenantTask(cpu=0.05, mem_mb=16.0, base_latency_ms=BASE_MS,
+                      tenant=tenant)
+
+
+def closed_loop(specs, populations, *, batch_execute=True,
+                horizon_hours=0.03, seed=5, max_batch=8):
+    cluster = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
+    cluster.profile(BASE_MS)
+    registry = TenantRegistry(specs)
+    engine = CarbonEdgeEngine(cluster, mode="balanced",
+                              policy=TenantPolicy(registry=registry),
+                              batch_execute=batch_execute)
+    pool = ClosedLoopClientPool(populations, seed=seed)
+    driver = AsyncEngineDriver(engine, None, factory, start_hour=0.0,
+                               horizon_hours=horizon_hours,
+                               max_batch=max_batch, slo_latency_s=5.0,
+                               clients=pool)
+    return driver, registry
+
+
+SPECS = [
+    TenantSpec("gold", slo=SLOClass(latency_s=1.0), priority=2),
+    TenantSpec("capped", allowance_g=0.02, period_hours=0.01,
+               slo=SLOClass(latency_s=2.0)),
+    TenantSpec("strict", allowance_g=0.004, period_hours=0.01,
+               defer_over_reject=False),
+]
+POPS = [
+    ClientPopulation("gold", 5, mean_think_hours=0.002, slo_latency_s=1.0,
+                     priority=2),
+    ClientPopulation("capped", 5, mean_think_hours=0.002, slo_latency_s=2.0),
+    ClientPopulation("strict", 4, mean_think_hours=0.002, slo_latency_s=2.0,
+                     max_attempts=2),
+]
+
+
+# ---------------------------------------------------------------------------
+# pool mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_pool_retry_backoff_and_abandon():
+    pool = ClosedLoopClientPool([ClientPopulation(
+        "t", 1, mean_think_hours=0.01, slo_latency_s=1.0, max_attempts=3,
+        backoff_base_hours=0.001, backoff_cap_hours=0.003)], seed=0)
+    assert pool.on_ready(0) == "t"
+    v1, at1 = pool.on_complete(0, latency_s=5.0, now_hour=1.0)   # miss 1
+    assert v1 == "retry" and at1 == 1.0 + 0.001
+    v2, at2 = pool.on_complete(0, latency_s=5.0, now_hour=2.0)   # miss 2
+    assert v2 == "retry" and at2 == 2.0 + 0.002
+    v3, at3 = pool.on_complete(0, latency_s=5.0, now_hour=3.0)   # miss 3
+    assert v3 == "abandon" and at3 > 3.0
+    # fresh request after the abandon; an in-SLO completion resets tries
+    pool.on_ready(0)
+    v4, _ = pool.on_complete(0, latency_s=0.1, now_hour=4.0)
+    assert v4 == "ok"
+    v5, at5 = pool.on_reject(0, now_hour=5.0)    # rejects walk same ladder
+    assert v5 == "retry" and at5 == 5.0 + 0.001
+    # backoff is capped
+    pool._attempts[0] = 3
+    assert pool._backoff(0) == 0.003
+
+
+def test_pool_initial_events_priority_order():
+    pool = ClosedLoopClientPool(
+        [ClientPopulation("low", 3, mean_think_hours=0.0),
+         ClientPopulation("high", 3, mean_think_hours=0.0, priority=9)],
+        seed=1)
+    evs = pool.initial_events(0.0)
+    # zero think time -> all fire at 0; high-priority tenants seed first
+    assert [pool.tenant_of(cid) for _, cid in evs] == \
+        ["high"] * 3 + ["low"] * 3
+
+
+# ---------------------------------------------------------------------------
+# closed-loop sim end to end
+# ---------------------------------------------------------------------------
+
+
+def test_closed_loop_byte_identical_repeat_and_exec_paths():
+    texts = []
+    for batch_execute in (True, True, False):
+        driver, _ = closed_loop(SPECS, POPS, batch_execute=batch_execute)
+        texts.append(driver.run().to_text())
+    assert texts[0] == texts[1], "repeat run not byte-identical"
+    assert texts[0] == texts[2], \
+        "batched and scalar execute paths diverged"
+
+
+def test_closed_loop_behaviour_and_tenant_metrics():
+    driver, reg = closed_loop(SPECS, POPS)
+    m = driver.run()
+    ts = m.tenant_summary()
+    # the unlimited interactive tenant is admitted everywhere
+    assert ts["gold"]["completed"] > 0 and ts["gold"]["rejected"] == 0
+    # the capped tenant was deferred across periods yet never over budget
+    assert ts["capped"]["deferred"] > 0
+    assert reg.peak_spent_g[1] <= 0.02 + 1e-12
+    # the reject-only tenant saw rejections -> client retries/abandons
+    assert ts["strict"]["rejected"] > 0
+    assert ts["strict"]["retries"] > 0
+    assert m.rejected.get("strict", 0) == int(reg.rejected[2])
+    # per-tenant SLO classes flow into the metrics layer
+    assert m.tenant_slo_s["gold"] == 1.0
+    assert 0.0 <= ts["gold"]["slo_attainment"] <= 1.0
+    # tenant lines render under the %.9g contract
+    text = m.to_text()
+    assert "tenant gold " in text and "tenant=strict" in text
+
+
+def test_closed_loop_load_reacts_to_saturation():
+    """Closed-loop demand throttles itself: tripling the client count
+    must NOT triple completions once the serial executor saturates."""
+    def completions(n_clients):
+        pops = [ClientPopulation("gold", n_clients,
+                                 mean_think_hours=0.0005,
+                                 slo_latency_s=10.0)]
+        driver, _ = closed_loop([TenantSpec("gold")], pops,
+                                horizon_hours=0.02)
+        return len(driver.run().records)
+
+    lo, hi = completions(4), completions(12)
+    assert hi >= lo                       # more clients, no fewer tasks
+    assert hi < 3 * lo                    # but nowhere near open-loop 3x
+
+
+def test_untenanted_sim_report_format_unchanged():
+    """A tenancy-free sim must render the exact pre-tenancy report: no
+    tenant lines, no tenant= suffixes (byte-format compatibility for the
+    existing determinism smokes)."""
+    cluster = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
+    cluster.profile(BASE_MS)
+    engine = CarbonEdgeEngine(cluster, mode="green")
+    driver = AsyncEngineDriver(
+        engine, ConstantRateArrivals(rate_per_hour=400.0),
+        lambda uid, hour: Task(cpu=0.05, mem_mb=16.0,
+                               base_latency_ms=BASE_MS),
+        start_hour=0.0, horizon_hours=0.05, max_batch=8)
+    text = driver.run().to_text()
+    assert "tenant" not in text
+    assert text.count("task uid=") == len(driver.metrics.records)
+
+
+def test_driver_adopts_tasks_the_engine_parked_before_attach():
+    """Budget-deferred tasks parked by direct engine use before a driver
+    attaches must be adopted (fresh uid, recorded) when a wake fires —
+    not crash or mispair the driver's own parked records."""
+    cluster = EdgeCluster(nodes=PAPER_NODES, host_power_w=142.0)
+    cluster.profile(BASE_MS)
+    registry = TenantRegistry([TenantSpec("capped", allowance_g=0.0045,
+                                          period_hours=0.01)])
+    engine = CarbonEdgeEngine(cluster, mode="balanced",
+                              policy=TenantPolicy(registry=registry))
+    # direct engine use: one task fits period 0, the second parks
+    engine.submit_many([TenantTask(cpu=0.05, mem_mb=16.0,
+                                   base_latency_ms=BASE_MS,
+                                   tenant="capped") for _ in range(2)])
+    engine.step(now_hour=0.0)
+    assert len(engine.deferred) == 1
+    pool = ClosedLoopClientPool(
+        [ClientPopulation("capped", 2, mean_think_hours=0.002,
+                          slo_latency_s=50.0, max_attempts=1)], seed=2)
+    driver = AsyncEngineDriver(engine, None, factory, start_hour=0.0,
+                               horizon_hours=0.02, max_batch=4,
+                               slo_latency_s=50.0, clients=pool)
+    m = driver.run()
+    assert not engine.deferred and not driver._parked
+    # every task the DRIVER executed (incl. the adopted orphan) has a
+    # TaskRecord; only the one pre-driver direct execution lacks one
+    assert len(m.records) == len(cluster.log) - 1
+    assert len(m.records) > 1
+
+
+def test_retry_past_horizon_counts_as_abandon():
+    """A retry whose backoff lands beyond the sim horizon is a request
+    that dies with the sim: it must count as abandoned, not vanish."""
+    specs = [TenantSpec("t", slo=SLOClass(latency_s=1e-6))]
+    pops = [ClientPopulation("t", 1, mean_think_hours=1e-5,
+                             slo_latency_s=1e-6,    # every completion misses
+                             max_attempts=5, backoff_base_hours=1.0)]
+    driver, _ = closed_loop(specs, pops, horizon_hours=0.001)
+    m = driver.run()
+    # exactly one request completes (misses its SLO), its retry fires at
+    # ~1h >> horizon and is recorded as the abandon
+    assert len(m.records) == 1
+    assert m.abandoned.get("t", 0) == 1
+    assert driver.clients._attempts[0] == 0
+
+
+def test_budget_deferred_work_resumes_in_next_period():
+    """Requests parked by admission complete after the period boundary,
+    with the parked time showing up as deferred_hours and wait."""
+    specs = [TenantSpec("capped", allowance_g=0.014, period_hours=0.01)]
+    pops = [ClientPopulation("capped", 3, mean_think_hours=0.001,
+                             slo_latency_s=50.0, max_attempts=1)]
+    driver, reg = closed_loop(specs, pops, horizon_hours=0.02)
+    m = driver.run()
+    deferred_recs = [r for r in m.records if r.deferred_hours > 0]
+    assert deferred_recs, "no task crossed a period boundary"
+    for r in deferred_recs:
+        assert r.start_hour >= 0.01 - 1e-12
+        assert r.wait_s > 0
+    assert not driver._parked
+    assert reg.peak_spent_g[0] <= 0.014 + 1e-12
