@@ -8,6 +8,7 @@ function here, so a red CI can be reproduced and debugged from a checkout:
     PYTHONPATH=src:. python -m benchmarks.ci_gates fleet
     PYTHONPATH=src:. python -m benchmarks.ci_gates sim
     PYTHONPATH=src:. python -m benchmarks.ci_gates tenancy
+    PYTHONPATH=src:. python -m benchmarks.ci_gates partition
     PYTHONPATH=src:. python -m benchmarks.ci_gates trend --baseline PREV.json
 
 (or ``python -m benchmarks.run --gate NAME`` — same registry.)
@@ -32,6 +33,14 @@ Gates:
   loose absolute per-task bound and within a small factor of the
   tenancy-free step (the 30 µs/task paper-budget row is the full
   ``benchmarks/tenancy_saturation.py`` run); writes BENCH_tenancy.json.
+- **partition** — reduced joint partition+placement sweep (DESIGN.md §8):
+  the (B, P, N) numpy column path bit-exact with the cut-major scalar
+  oracle, the end-to-end ``engine.step`` with a PartitionPolicy (select +
+  effective-latency execute + bill) under a loose absolute per-task
+  bound with both execute paths bit-identical, risk-bounded deferral
+  planning satisfying the never-defer invariant at tight AND wide
+  conformal bands, and split-conformal held-out coverage >= 0.87 against
+  the 90% target; writes BENCH_partition.json.
 - **trend** — compare this checkout's fleet-scale end-to-end per-task
   times against a previous run's ``BENCH_fleet_scale.json`` (CI restores
   the last main-branch run via actions/cache) and fail on a >2x relative
@@ -132,6 +141,27 @@ def gate_tenancy(out_path: str = "BENCH_tenancy.json") -> Dict:
     return out
 
 
+def gate_partition(out_path: str = "BENCH_partition.json") -> Dict:
+    from benchmarks import partition_scale
+
+    out = partition_scale.run(smoke=True, out_path=out_path)
+    for r in out["select"]:
+        assert r["parity_ok"], r
+        assert r["joint_per_task_ms"] < 0.5, r
+    for r in out["step"]:
+        assert r["exec_path_parity"], r
+        # loose absolute backstop at smoke scale; the 30 us/task paper-
+        # budget row is the full-sweep N=10^4, B=1024, P=32 run
+        assert r["per_task_ms"] < 0.5, r
+    for r in out["risk"]:
+        assert r["invariant_ok"], r
+    tight = [r for r in out["risk"] if r["sigma"] < 1.0]
+    assert tight and all(r["deferred"] > 0 for r in tight), \
+        "tight conformal band certified no deferrals (vacuous invariant)"
+    assert out["conformal"]["heldout_coverage"] >= 0.87, out["conformal"]
+    return out
+
+
 def _trend_rows(bench: Dict) -> Dict[tuple, float]:
     """(section, n_nodes, batch) -> per-task ms for the rows the trend
     gate tracks: cached selection and the end-to-end batched step."""
@@ -184,6 +214,7 @@ GATES: Dict[str, Callable] = {
     "fleet": gate_fleet,
     "sim": gate_sim,
     "tenancy": gate_tenancy,
+    "partition": gate_partition,
     "trend": gate_trend,
 }
 

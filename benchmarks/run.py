@@ -12,7 +12,7 @@ from __future__ import annotations
 
 def main() -> None:
     from benchmarks import (fig2_tradeoff, fig3_weight_sweep, fleet_scale,
-                            overhead, roofline, sim_serving,
+                            overhead, partition_scale, roofline, sim_serving,
                             table2_carbon_footprint, table4_multi_model,
                             table5_node_distribution, temporal_shifting,
                             tenancy_saturation)
@@ -89,6 +89,16 @@ def main() -> None:
     rows.append(("tenancy_saturation_fairness", 0.0,
                  f"jain={sat['budget_fairness_jain']:.3f}"))
 
+    pt = partition_scale.run()
+    pstep = max(pt["step"], key=lambda r: (r["n_nodes"], r["batch"],
+                                           r["cuts"]))
+    rows.append((f"partition_step_e2e_{pstep['n_nodes']}n_{pstep['batch']}b"
+                 f"_{pstep['cuts']}p",
+                 pstep["per_task_ms"] * 1e3,
+                 f"vs_paper_budget_x={pstep['vs_paper_x']:.2f}"))
+    rows.append(("partition_conformal_coverage", 0.0,
+                 f"heldout={pt['conformal']['heldout_coverage']:.3f}"))
+
     for r in roofline.load():
         rows.append((f"roofline_{r['arch']}_{r['shape']}",
                      r["step_time_s"] * 1e6,
@@ -106,7 +116,8 @@ if __name__ == "__main__":
     parser.add_argument("--gate", default=None,
                         help="run a CI gate from benchmarks.ci_gates "
                              "('overhead', 'fleet', 'sim', 'tenancy', "
-                             "'trend', 'all') instead of the benchmark CSV")
+                             "'partition', 'trend', 'all') instead of the "
+                             "benchmark CSV")
     parser.add_argument("--baseline", default=None,
                         help="baseline BENCH_fleet_scale.json for --gate trend")
     cli = parser.parse_args()

@@ -73,6 +73,31 @@ def intensity_batch(provider: CarbonIntensityProvider,
                      for t in h])
 
 
+def intensity_interval_batch(provider: CarbonIntensityProvider,
+                             names: Sequence[str], hours,
+                             coverage: float = 0.9):
+    """Batched ``(lo, hi)`` conformal intensity interval read (DESIGN.md
+    §8): each array shaped like :func:`intensity_batch`'s result.
+
+    Dispatches to the provider's ``intensity_interval_batch`` when it has
+    one (all bundled providers do — measured signals answer zero-width
+    intervals, a calibrated :class:`ForecastProvider` answers its
+    split-conformal band); any other provider degrades to the degenerate
+    point interval ``lo == hi == intensity_batch(...)``, which keeps every
+    risk-bounded caller exact-but-risk-blind rather than failing.
+    """
+    fn = getattr(provider, "intensity_interval_batch", None)
+    if fn is not None:
+        return fn(names, hours, coverage=coverage)
+    v = np.asarray(intensity_batch(provider, names, hours), dtype=float)
+    return v, v.copy()
+
+
+def _point_interval(vals):
+    v = np.asarray(vals, dtype=float)
+    return v, v.copy()
+
+
 @dataclass(frozen=True)
 class StaticProvider:
     """Time-invariant regional intensities (paper §IV.A scenario)."""
@@ -95,6 +120,11 @@ class StaticProvider:
         if h.ndim == 0:
             return vals
         return np.broadcast_to(vals, (h.size, len(names))).copy()
+
+    def intensity_interval_batch(self, names: Sequence[str], hours,
+                                 coverage: float = 0.9):
+        # Registered constants are exact: zero-width interval.
+        return _point_interval(self.intensity_batch(names, hours))
 
     def covers(self, node: str) -> bool:
         return self.default is not None or node in self.table
@@ -167,6 +197,33 @@ class TraceProvider:
             out[:, missing] = np.asarray(sub).reshape(hs.size, len(missing))
         return out[0] if h.ndim == 0 else out
 
+    def intensity_interval_batch(self, names: Sequence[str], hours,
+                                 coverage: float = 0.9):
+        # Traces are the measured ground-truth signal: zero-width for
+        # traced nodes; untraced nodes get the fallback's intervals.
+        h = np.asarray(hours, dtype=float)
+        hs = h.reshape(-1)
+        lo = np.empty((hs.size, len(names)))
+        hi = np.empty((hs.size, len(names)))
+        have = [j for j, n in enumerate(names) if n in self.traces]
+        miss = [j for j in range(len(names)) if j not in set(have)]
+        if have:
+            v = np.asarray(self.intensity_batch([names[j] for j in have],
+                                                hs)).reshape(hs.size,
+                                                             len(have))
+            lo[:, have] = v
+            hi[:, have] = v
+        if miss:
+            if self.fallback is None:
+                raise KeyError(
+                    f"no trace or fallback intensity for {names[miss[0]]!r}")
+            sub_lo, sub_hi = intensity_interval_batch(
+                self.fallback, [names[j] for j in miss], hs,
+                coverage=coverage)
+            lo[:, miss] = np.asarray(sub_lo).reshape(hs.size, len(miss))
+            hi[:, miss] = np.asarray(sub_hi).reshape(hs.size, len(miss))
+        return (lo[0], hi[0]) if h.ndim == 0 else (lo, hi)
+
     def covers(self, node: str) -> bool:
         if node in self.traces:
             return True
@@ -235,6 +292,33 @@ class FallbackProvider:
         out = np.stack(cols, axis=1)
         return out[0] if h.ndim == 0 else out
 
+    def intensity_interval_batch(self, names: Sequence[str], hours,
+                                 coverage: float = 0.9):
+        # Planning-path read (not per-step hot): resolve per name so each
+        # node gets ITS provider's interval — primary when covered,
+        # fallback otherwise — with the same KeyError-degradation rule as
+        # the point read above.
+        h = np.asarray(hours, dtype=float)
+        hs = h.reshape(-1)
+        lo = np.empty((hs.size, len(names)))
+        hi = np.empty((hs.size, len(names)))
+        cov = getattr(self.primary, "covers", None)
+        for j, n in enumerate(names):
+            use_primary = bool(cov(n)) if cov is not None else True
+            sub = None
+            if use_primary:
+                try:
+                    sub = intensity_interval_batch(self.primary, [n], hs,
+                                                   coverage=coverage)
+                except KeyError:
+                    sub = None
+            if sub is None:
+                sub = intensity_interval_batch(self.fallback, [n], hs,
+                                               coverage=coverage)
+            lo[:, j] = np.asarray(sub[0]).reshape(hs.size)
+            hi[:, j] = np.asarray(sub[1]).reshape(hs.size)
+        return (lo[0], hi[0]) if h.ndim == 0 else (lo, hi)
+
 
 @dataclass(frozen=True)
 class ForecastProvider:
@@ -244,12 +328,20 @@ class ForecastProvider:
     deferral decision made now about time t+lead); ``smoothing_hours``
     averages the base signal over a centred window, modelling forecast
     uncertainty flattening out short-lived dips.
+
+    ``conformal`` optionally attaches a split-conformal residual
+    calibrator (anything with ``quantile(coverage) -> float``, e.g.
+    :class:`repro.partition.uncertainty.SplitConformal` built by
+    ``calibrate_intensity``): ``intensity_interval_batch`` then answers
+    the symmetric conformal band around the forecast instead of a
+    zero-width point interval.
     """
 
     base: CarbonIntensityProvider
     lead_hours: float = 0.0
     smoothing_hours: float = 0.0
     samples: int = 5
+    conformal: Optional[object] = None
 
     def intensity(self, node: str, hour: float = 0.0) -> float:
         t = hour + self.lead_hours
@@ -275,6 +367,16 @@ class ForecastProvider:
                  for k in range(ts2.shape[0])]
         out = np.mean(grids, axis=0)                                # (S, N)
         return out[0] if h.ndim == 0 else out
+
+    def intensity_interval_batch(self, names: Sequence[str], hours,
+                                 coverage: float = 0.9):
+        pred = np.asarray(self.intensity_batch(names, hours), dtype=float)
+        if self.conformal is None:
+            return pred, pred.copy()
+        q = float(self.conformal.quantile(coverage))
+        # Intensities are non-negative physical quantities: clip the lower
+        # band at zero rather than promising a negative grid.
+        return np.maximum(pred - q, 0.0), pred + q
 
     def window(self, node: str, start_hour: float, end_hour: float,
                step_hours: float = 0.5) -> np.ndarray:
@@ -434,10 +536,19 @@ class CarbonEdgeEngine:
             choices = self.policy.select_batch(
                 self.cluster, batch, self.weights, provider=self.provider,
                 now_hour=now_hour)
+            # Partitioned-execution hook (DESIGN.md §8): a policy exposing
+            # execution_latency_ms (e.g. repro.partition.PartitionPolicy)
+            # makes the engine execute and bill only the offloaded
+            # segment's effective latency. Both execute paths consume the
+            # same array, preserving batched/scalar parity.
+            eff_fn = getattr(self.policy, "execution_latency_ms", None)
+            base_override = eff_fn(batch) if eff_fn is not None else None
             if self.batch_execute:
-                self._execute_batched(batch, choices, now_hour, results)
+                self._execute_batched(batch, choices, now_hour, results,
+                                      base_override)
             else:
-                self._execute_scalar(batch, choices, now_hour, results)
+                self._execute_scalar(batch, choices, now_hour, results,
+                                     base_override)
         except BaseException:
             # On ANY failure (infeasible node, provider KeyError, execution
             # error) put everything not successfully executed back at the
@@ -534,10 +645,13 @@ class CarbonEdgeEngine:
 
     def _execute_scalar(self, batch: Sequence[Task],
                         choices: Sequence[Optional[str]], now_hour: float,
-                        results: List[TaskResult]) -> None:
+                        results: List[TaskResult],
+                        base_override=None) -> None:
         """Per-task execute+bill loop — the parity oracle the batched path
-        is bit-identical to (cluster/monitor ledgers, log, requeue state)."""
-        for task, node in zip(batch, choices):
+        is bit-identical to (cluster/monitor ledgers, log, requeue state).
+        ``base_override`` replaces each task's base latency (the policy's
+        partitioned effective latency), same array the batched path uses."""
+        for i, (task, node) in enumerate(zip(batch, choices)):
             if node is None:
                 # Already-executed results travel on the exception; the
                 # infeasible task and the tail are requeued by step().
@@ -549,10 +663,12 @@ class CarbonEdgeEngine:
             # (which would double-execute it).
             exec_intensity = self.provider.intensity(node, now_hour)
             self.monitor.billing_intensity(node, now_hour)
+            base = (task.base_latency_ms if base_override is None
+                    else float(base_override[i]))
             st.running += 1
             try:
                 res = self.cluster.execute(
-                    node, task.base_latency_ms, distributed=True,
+                    node, base, distributed=True,
                     intensity=exec_intensity)
             finally:
                 st.running -= 1
@@ -584,7 +700,8 @@ class CarbonEdgeEngine:
 
     def _execute_batched(self, batch: Sequence[Task],
                          choices: Sequence[Optional[str]], now_hour: float,
-                         results: List[TaskResult]) -> None:
+                         results: List[TaskResult],
+                         base_override=None) -> None:
         """Vectorized execute+bill (DESIGN.md §6): one
         ``cluster.execute_batch`` + one ``monitor.record_energy_batch`` for
         the feasible prefix — O(distinct nodes) Python work per step
@@ -640,8 +757,10 @@ class CarbonEdgeEngine:
                         bv = np.array([bill_int[n] for n in uniq],
                                       dtype=float)
         if nodes:
-            base = np.array([t.base_latency_ms for t in batch[:cut]],
-                            dtype=float)
+            base = (np.array([t.base_latency_ms for t in batch[:cut]],
+                             dtype=float)
+                    if base_override is None
+                    else np.asarray(base_override[:cut], dtype=float))
             res = self.cluster.execute_batch(nodes, base, distributed=True,
                                              intensities=ev[inverse],
                                              groups=groups)

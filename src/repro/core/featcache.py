@@ -110,6 +110,7 @@ class FeatureCache:
         self._topo_seen = cl._topo_rev
         self.data_rev += 1
         self._reset_intensity_cache()
+        self._part_blocks = {}
 
     def sync(self) -> None:
         """Bring columns up to date: O(changed) row refreshes, or a full
@@ -167,6 +168,35 @@ class FeatureCache:
             self._int_vals[idx] = np.asarray(vals, dtype=float)
             self._int_have[idx] = True
         return self._int_vals
+
+    # -- joint partition columns (repro.partition, DESIGN.md §8) -----------
+    # Bound on live per-profile blocks: a deployment schedules a handful of
+    # model profiles; past this the keys are churning and the dict is
+    # dropped wholesale rather than grown without bound.
+    _PART_BLOCK_MAX = 64
+
+    def partition_block(self, key, remote_frac: np.ndarray,
+                        comm_s: np.ndarray):
+        """(P, N) joint time/energy columns for one cut profile:
+
+        ``t[p, n] = avg_time_s[n] * remote_frac[p] + comm_s[p]`` (seconds)
+        ``e[p, n] = power[n] * (t * 1e3) / 3.6e6``        (kWh, Eq. 4)
+
+        Cached per ``key`` (the policy passes its hashable (CutProfile,
+        link speed) pair) and recomputed only when ``data_rev`` moves, so
+        the joint scorer stays on the incremental O(changed) path — a
+        steady fleet pays zero per-step column work regardless of P.
+        """
+        blk = self._part_blocks.get(key)
+        if blk is not None and blk[0] == self.data_rev:
+            return blk[1], blk[2]
+        if len(self._part_blocks) >= self._PART_BLOCK_MAX:
+            self._part_blocks.clear()
+        t = (self.avg_time_s[None, :] * np.asarray(remote_frac)[:, None]
+             + np.asarray(comm_s)[:, None])
+        e = self.power[None, :] * (t * 1000.0) / 3.6e6
+        self._part_blocks[key] = (self.data_rev, t, e)
+        return t, e
 
     # -- masks -------------------------------------------------------------
     def node_ok(self, latency_threshold_ms: float = float("inf")) -> np.ndarray:

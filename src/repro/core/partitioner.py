@@ -48,15 +48,40 @@ def _imbalance(seg_costs: np.ndarray, weights: np.ndarray) -> float:
 
 def partition_costs(costs: Sequence[float], node_weights: Sequence[float],
                     boundary_bytes: Optional[Sequence[float]] = None,
-                    comm_weight: float = 0.0) -> Partition:
+                    comm_weight: float = 0.0,
+                    node_ids: Optional[Sequence[str]] = None) -> Partition:
     """DP partition of `costs` into len(node_weights) contiguous segments.
 
-    Minimises  max_i seg_cost_i / share_i  +  comm_weight * sum(cut bytes).
-    boundary_bytes[i] = bytes crossing a cut before layer i (len == len(costs)+1).
+    Minimises  max_i (seg_cost_i / share_i + comm_weight * bytes(cut_i))
+    where bytes(cut_i) is the activation tensor crossing the cut that
+    *starts* segment i (the first segment pays no comm). boundary_bytes[i]
+    = bytes crossing a cut before layer i (len == len(costs)+1).
+
+    ``node_ids`` labels segments with the caller's node names (defaults to
+    "0".."k-1"); its length must match ``node_weights``. Degenerate inputs
+    stay shape-consistent (len(node_order) == num_segments ==
+    len(comm_bytes)+1): with fewer layers than nodes only the first
+    ``min(L, k)`` nodes receive a segment, and a single-node (or empty)
+    model is one whole segment on the first node. ``k == 0`` raises.
     """
     L, k = len(costs), len(node_weights)
-    if k <= 1 or L < k:
-        return Partition((0, L), (float(sum(costs)),), (), ("0",) * min(1, k))
+    if k <= 0:
+        raise ValueError("partition_costs needs at least one node weight")
+    if node_ids is None:
+        node_ids = tuple(str(i) for i in range(k))
+    else:
+        node_ids = tuple(str(n) for n in node_ids)
+        if len(node_ids) != k:
+            raise ValueError(
+                f"node_ids length {len(node_ids)} != node_weights length {k}")
+    # Fewer layers than nodes: only the first L nodes can receive a
+    # (non-empty) segment — partition over that prefix.
+    if L < k:
+        k = max(L, 1)
+        node_weights = list(node_weights)[:k]
+        node_ids = node_ids[:k]
+    if k == 1:
+        return Partition((0, L), (float(sum(costs)),), (), (node_ids[0],))
     costs = np.asarray(costs, dtype=np.float64)
     prefix = np.concatenate([[0.0], np.cumsum(costs)])
     w = np.asarray(node_weights, dtype=np.float64)
@@ -97,7 +122,7 @@ def partition_costs(costs: Sequence[float], node_weights: Sequence[float],
     seg_costs = tuple(float(prefix[b] - prefix[a])
                       for a, b in zip(bounds[:-1], bounds[1:]))
     comm = tuple(float(bb[b]) for b in bounds[1:-1])
-    return Partition(bounds, seg_costs, comm, tuple(str(i) for i in range(k)))
+    return Partition(bounds, seg_costs, comm, node_ids)
 
 
 # ---------------------------------------------------------------------------
@@ -109,12 +134,23 @@ def capacity_weights(cpus: Sequence[float]) -> np.ndarray:
     return np.asarray(cpus, dtype=np.float64)
 
 
+# Carbon intensities at or below this floor (gCO2/kWh) are clamped before
+# inversion: a node reporting zero intensity (co-located renewable, or a
+# trace gap) would otherwise turn green_weights into inf/NaN after
+# normalisation. At the floor the node simply wins the carbon term outright
+# — real grid signals sit orders of magnitude above it.
+GREEN_INTENSITY_FLOOR = 1e-6
+
+
 def green_weights(cpus: Sequence[float], intensities: Sequence[float],
                   carbon_weight: float = 0.5) -> np.ndarray:
     """Blend capacity with inverse carbon intensity (green partitioning):
-    w_i = cpu_i^(1-a) * (1/I_i)^a, normalised."""
+    w_i = cpu_i^(1-a) * (1/I_i)^a, normalised. Intensities are clamped
+    below at :data:`GREEN_INTENSITY_FLOOR` so zero-carbon nodes produce
+    finite weights."""
     c = np.asarray(cpus, dtype=np.float64)
-    inv_i = 1.0 / np.asarray(intensities, dtype=np.float64)
+    inv_i = 1.0 / np.maximum(np.asarray(intensities, dtype=np.float64),
+                             GREEN_INTENSITY_FLOOR)
     w = np.power(c, 1.0 - carbon_weight) * np.power(inv_i / inv_i.max(), carbon_weight)
     return w / w.sum()
 
@@ -125,18 +161,22 @@ def green_weights(cpus: Sequence[float], intensities: Sequence[float],
 
 
 def partition_cnn(cfg: CNNConfig, node_weights: Sequence[float],
-                  batch: int = 1, comm_weight: float = 0.0) -> Partition:
+                  batch: int = 1, comm_weight: float = 0.0,
+                  node_ids: Optional[Sequence[str]] = None) -> Partition:
     from repro.models import cnn as cnn_mod
 
     costs = costmodel.cnn_costs(cfg)
     bb = [cnn_mod.activation_bytes(cfg, i, batch) for i in range(len(costs) + 1)]
-    return partition_costs(costs, node_weights, bb, comm_weight)
+    return partition_costs(costs, node_weights, bb, comm_weight,
+                           node_ids=node_ids)
 
 
 def partition_transformer(cfg: ModelConfig, node_weights: Sequence[float],
                           seq: int, batch: int,
-                          comm_weight: float = 0.0) -> Partition:
+                          comm_weight: float = 0.0,
+                          node_ids: Optional[Sequence[str]] = None) -> Partition:
     costs = [costmodel.block_flops(cfg, ld, seq, batch)
              for ld in cfg.layer_defs]
     bb = [costmodel.boundary_bytes(cfg, seq, batch)] * (len(costs) + 1)
-    return partition_costs(costs, node_weights, bb, comm_weight)
+    return partition_costs(costs, node_weights, bb, comm_weight,
+                           node_ids=node_ids)

@@ -135,11 +135,17 @@ def featurize_cached(cache, tasks: Sequence[Task],
     return F, list(cache.names)
 
 
-def _get_cache(cluster):
+def get_cache(cluster):
     """The cluster's synced FeatureCache, or None for cluster-likes that
-    don't carry one (anything without the EdgeCluster topology plumbing)."""
+    don't carry one (anything without the EdgeCluster topology plumbing).
+    Shared by the policies here and :class:`repro.partition.policy.
+    PartitionPolicy` (which widens selection to (B, P, N))."""
     fc = getattr(cluster, "feature_cache", None)
     return fc() if callable(fc) else None
+
+
+# Backwards-compatible alias (pre-partition-subsystem name).
+_get_cache = get_cache
 
 
 class _SelectionMemo:
@@ -381,7 +387,7 @@ class VectorizedPolicy:
 
     def _select_unique(self, cluster, reps: Sequence[Task], weights: Weights,
                        provider, now_hour: float) -> List[Optional[str]]:
-        cache = _get_cache(cluster) if self.use_cache else None
+        cache = get_cache(cluster) if self.use_cache else None
         if cache is None:
             F, names = featurize(cluster, reps, provider, now_hour,
                                  self.latency_threshold_ms)
@@ -554,7 +560,7 @@ class TemporalPolicy:
         # so skip the N provider queries featurize would otherwise spend on
         # a column that gets overwritten.
         slot_provider = None if duration > 0 else provider
-        cache = _get_cache(cluster) if self.scorer.use_cache else None
+        cache = get_cache(cluster) if self.scorer.use_cache else None
         if cache is not None:
             F, names = featurize_cached(cache, [task], slot_provider,
                                         now_hour,

@@ -222,6 +222,85 @@ def plan_wake_batch(provider, cluster: EdgeCluster, tasks, now_hour: float,
     return wakes
 
 
+def plan_wake_risk(provider, cluster: EdgeCluster, task, now_hour: float,
+                   slot_hours: float = 0.5, coverage: float = 0.9) -> float:
+    """Risk-bounded :func:`plan_wake` (scalar front-end); see
+    :func:`plan_wake_risk_batch`."""
+    return float(plan_wake_risk_batch(provider, cluster, [task], now_hour,
+                                      slot_hours, coverage)[0])
+
+
+def plan_wake_risk_batch(provider, cluster: EdgeCluster, tasks,
+                         now_hour: float, slot_hours: float = 0.5,
+                         coverage: float = 0.9) -> np.ndarray:
+    """Risk-bounded deferral planning over conformal intensity intervals
+    (DESIGN.md §8).
+
+    :func:`plan_wake_batch` trusts the provider's point forecast; with a
+    noisy forecast that gambles real carbon on a predicted dip. Here the
+    grid is read as ``coverage``-level intervals
+    (:func:`repro.core.api.intensity_interval_batch`) and a task defers
+    only when the deferral wins even under the interval's pessimistic
+    view: the candidate future slot is the feasible (slot >= 1, node)
+    cell minimising the interval UPPER bound (earliest slot, first node
+    on ties), and the task defers to it only if that upper bound strictly
+    undercuts the best LOWER bound of executing now (slot 0 over the
+    feasible nodes). Since lo <= hi everywhere, a deferral whose lower
+    bound loses to executing now can never happen — the acceptance
+    invariant regression-tested in tests/test_partition.py. Zero-width
+    (point-interval) providers degrade to "defer only on strict
+    improvement". Tasks without deadline slack, or with no feasible node,
+    wake immediately.
+    """
+    from repro.core.api import intensity_interval_batch
+
+    T = len(tasks)
+    wakes = np.full(T, now_hour, dtype=float)
+    n_slots = np.array([_wake_slots(t, slot_hours) for t in tasks])
+    todo = np.nonzero(n_slots > 1)[0]      # s == 1 has no future slot
+    if todo.size == 0:
+        return wakes
+    fc = getattr(cluster, "feature_cache", None)
+    if callable(fc):
+        cache = fc()
+        all_names = cache.names
+        task_cpu = np.array([tasks[i].cpu for i in todo], dtype=float)
+        task_mem = np.array([tasks[i].mem_mb for i in todo], dtype=float)
+        feas = cache.feasible(task_cpu, task_mem)        # (T', N)
+    else:
+        all_names = list(cluster.nodes)
+        feas = np.array([[node_feasible(cluster.nodes[n], tasks[i])
+                          for n in all_names] for i in todo])
+    need = feas.any(axis=0)
+    if not need.any():
+        return wakes
+    cols = np.nonzero(need)[0]
+    names = [all_names[j] for j in cols]
+    S = int(n_slots[todo].max())
+    hours = now_hour + np.arange(S) * slot_hours
+    lo, hi = intensity_interval_batch(provider, names, hours,
+                                      coverage=coverage)
+    lo = np.asarray(lo, dtype=float).reshape(S, len(names))
+    hi = np.asarray(hi, dtype=float).reshape(S, len(names))
+    for row, ti in enumerate(todo):
+        ok = feas[row, cols]
+        if not ok.any():
+            continue
+        s = int(n_slots[ti])
+        # optimistic cost of running now: best slot-0 lower bound
+        now_opt = float(np.where(ok, lo[0, :], np.inf).min())
+        # pessimistic cost of the best deferral candidate (slots 1..s-1)
+        sub_hi = np.where(ok[None, :], hi[1:s, :], np.inf)
+        if not np.isfinite(sub_hi).any():
+            continue
+        m = sub_hi.min(axis=0)
+        j = int(np.argmin(m))              # first node on exact ties
+        k = 1 + int(np.argmin(sub_hi[:, j]))   # earliest slot on ties
+        if sub_hi[k - 1, j] < now_opt:
+            wakes[ti] = now_hour + k * slot_hours
+    return wakes
+
+
 class TemporalScheduler:
     """Space-time extension of the NSA (Algorithm 1 over a slot grid).
 

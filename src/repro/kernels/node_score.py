@@ -186,6 +186,93 @@ def select_best_fused(features, weights, *, bn: int = 1024,
 
 
 # ---------------------------------------------------------------------------
+# Joint (cut, node) selection: fold the winner over a (B, P, N) grid
+# ---------------------------------------------------------------------------
+
+
+def _joint_select_kernel(n_pad, f_ref, w_ref, idx_ref, val_ref):
+    """One (1, 1, bn, 8) node tile of one (task, cut) cell: score it with
+    the shared Eq. 3 tile math and fold into the running per-task best
+    across the sequential cut-major (p, then node-tile j) grid axes. The
+    emitted index is flat over the padded (P, N_pad) plane — cut-major, so
+    strict-> folding keeps the lowest (p, n) on exact ties, np.argmax-
+    compatible with the numpy path's reshape over (P, N)."""
+    p = pl.program_id(1)
+    j = pl.program_id(2)
+    f = f_ref[0, 0]                                # (bn, 8)
+    w = w_ref[...]                                 # (1, 8)
+    s = _eq3_tile_scores(f, w)[None, :]            # (1, bn)
+    bn = s.shape[1]
+    tile_max = jnp.max(s, axis=1)                             # (1,)
+    ii = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    tile_arg = jnp.min(jnp.where(s == tile_max[:, None], ii, bn), axis=1)
+    gidx = (p * n_pad + j * bn + tile_arg).astype(jnp.int32)  # (1,)
+    first = (p == 0) & (j == 0)
+
+    @pl.when(first)
+    def _init():
+        val_ref[...] = tile_max[:, None]
+        idx_ref[...] = gidx[:, None]
+
+    @pl.when(jnp.logical_not(first))
+    def _fold():
+        prev = val_ref[0, 0]
+        # strict > keeps the lowest flat (p, n) index on exact ties
+        better = tile_max[0] > prev
+        val_ref[0, 0] = jnp.where(better, tile_max[0], prev)
+        idx_ref[0, 0] = jnp.where(better, gidx[0], idx_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def select_best_joint(features, weights, *, bn: int = 1024,
+                      interpret: bool = False):
+    """features: (B, P, N, 8) f32; weights: (8,) f32 ->
+    ((B,) int32 cut index, (B,) int32 node index, (B,) f32 best score).
+
+    The joint partition+placement reduction
+    (:class:`repro.partition.policy.PartitionPolicy`): each task row scans
+    its P candidate cuts x N nodes in one pallas_call and ships 3*B
+    scalars to host — the (B, P, N) score tensor never leaves the chip.
+    The fold order is cut-major (all node tiles of cut 0, then cut 1, ...)
+    with a strict-> combine, so exact score ties resolve to the lowest
+    (p, n) pair — the same winner ``np.argmax`` picks over the flattened
+    (P, N) plane. N is padded to a multiple of ``bn`` (padding rows
+    invalid -> NEG_INF); callers wanting a bounded jit cache pad (B, P, N)
+    to shape buckets first (PartitionPolicy does).
+    """
+    B, P, n0, _ = features.shape
+    pad = (-n0) % bn
+    if pad:
+        features = jnp.pad(features, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    N = features.shape[2]
+    w2 = weights.reshape(1, 8)
+    idx, val = pl.pallas_call(
+        functools.partial(_joint_select_kernel, N),
+        grid=(B, P, N // bn),
+        in_specs=[
+            pl.BlockSpec((1, 1, bn, 8), lambda i, p, j: (i, p, j, 0)),
+            pl.BlockSpec((1, 8), lambda i, p, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, p, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, p, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        compiler_params=compat.pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(features, w2)
+    flat = idx[:, 0]
+    # Padding rows can only win when nothing real is feasible, in which
+    # case the score is NEG_INF and callers discard the indices anyway.
+    return ((flat // N).astype(jnp.int32), (flat % N).astype(jnp.int32),
+            val[:, 0])
+
+
+# ---------------------------------------------------------------------------
 # Sharded node axis: N >= 10^5 fleets across devices
 # ---------------------------------------------------------------------------
 

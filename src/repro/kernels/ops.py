@@ -69,6 +69,14 @@ def select_best_node_fused(features, weights):
     return _ns.select_best_fused(features, weights, interpret=_interpret())
 
 
+def select_best_node_joint(features, weights):
+    """(B, P, N, 8) x (8,) -> ((B,) int32 cut idx, (B,) int32 node idx,
+    (B,) f32 best score): the fused joint partition+placement reduction —
+    per-task (cut, node) winners folded on-chip with lowest-(p, n) tie
+    semantics; see node_score.select_best_joint."""
+    return _ns.select_best_joint(features, weights, interpret=_interpret())
+
+
 def select_best_node_sharded(features, weights, mesh=None, axis="nodes"):
     """Fused select with the node axis sharded across devices via
     shard_map (cross-shard argmax combine); see node_score.select_best_sharded."""

@@ -1,0 +1,12 @@
+"""Joint partition+placement scheduling with conformal uncertainty
+(DESIGN.md §8): per-model cut profiles, the (B, P, N) PartitionPolicy,
+and split-conformal calibrators for risk-bounded decisions."""
+from repro.partition.policy import (DEFAULT_LINK_MBPS, JointDecision,
+                                    PartitionPolicy, joint_time_energy,
+                                    select_joint_scalar)
+from repro.partition.profile import (CutProfile, profile_cnn, profile_costs,
+                                     profile_transformer)
+from repro.partition.uncertainty import (ConformalProvider, SplitConformal,
+                                         calibrate_intensity,
+                                         calibrate_latency,
+                                         intensity_interval_batch)

@@ -1,0 +1,113 @@
+"""Per-model candidate cut profiles for joint (cut, node) scheduling.
+
+The scalar green partitioner (core/partitioner.py) answers "how do I split
+this model across a *given* node list". The joint scheduler asks the
+converse: "over every candidate cut point and every node, which (cut,
+node) pair scores best right now". This module derives the per-model side
+of that decision once — a :class:`CutProfile` holding vectorized (P,)
+per-segment FLOP and activation-byte columns from the same cost fronts
+``partition_costs`` uses (``costmodel.cnn_costs`` + ``models.cnn.
+activation_bytes`` for CNNs, ``costmodel.block_flops`` +
+``costmodel.boundary_bytes`` for transformers) — so the per-step work in
+:class:`repro.partition.policy.PartitionPolicy` is pure column math.
+
+Cut semantics: cut ``c`` runs layers [0, c) on the requesting device and
+offloads layers [c, L) to the chosen node. ``c = 0`` (always a candidate)
+is full offload — exactly what the cut-unaware scheduler does — so the
+joint decision can only match or beat it under the same scoring rule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import CNNConfig, ModelConfig
+from repro.core import costmodel
+
+
+@dataclass(frozen=True)
+class CutProfile:
+    """Candidate cuts for one model with (P,)-aligned per-segment columns.
+
+    Frozen and tuple-backed so a profile is hashable — the FeatureCache
+    keys its per-profile joint column block on the profile object itself
+    (see ``FeatureCache.partition_block``).
+    """
+
+    name: str
+    total_cost: float                    # sum of per-layer Eq. 5 costs/FLOPs
+    cuts: Tuple[int, ...]                # (P,) ascending cut indices, cuts[0] == 0
+    local_cost: Tuple[float, ...]        # (P,) cost of layers [0, c)
+    remote_cost: Tuple[float, ...]       # (P,) cost of layers [c, L)
+    comm_bytes: Tuple[float, ...]        # (P,) activation bytes crossing c
+
+    @property
+    def num_cuts(self) -> int:
+        return len(self.cuts)
+
+    def remote_frac(self) -> np.ndarray:
+        """(P,) fraction of the model's compute that lands on the fleet."""
+        r = np.asarray(self.remote_cost, dtype=np.float64)
+        return r / max(self.total_cost, 1e-12)
+
+    def comm_seconds(self, link_mbps: float) -> np.ndarray:
+        """(P,) transfer time of the boundary activation over the uplink."""
+        return np.asarray(self.comm_bytes, dtype=np.float64) / (link_mbps * 125000.0)
+
+
+def profile_costs(costs: Sequence[float],
+                  boundary_bytes: Optional[Sequence[float]] = None,
+                  name: str = "model", max_cuts: int = 32) -> CutProfile:
+    """Build a :class:`CutProfile` from per-layer costs + boundary bytes.
+
+    Candidate cuts are every layer index 0..L-1 (the offloaded suffix is
+    never empty — a fully-local task needs no placement at all). When the
+    model has more layers than ``max_cuts``, the candidates are thinned
+    deterministically to the cuts with the smallest crossing bytes (ties
+    by index), always keeping cut 0, and re-sorted ascending.
+    """
+    costs = np.asarray(costs, dtype=np.float64)
+    L = costs.size
+    bb = np.asarray(boundary_bytes if boundary_bytes is not None
+                    else np.zeros(L + 1), dtype=np.float64)
+    prefix = np.concatenate([[0.0], np.cumsum(costs)])         # (L+1,)
+    cand = np.arange(max(L, 1))
+    if max_cuts and cand.size > max_cuts:
+        rest = cand[1:]
+        order = np.lexsort((rest, bb[rest]))                   # bytes, then index
+        cand = np.concatenate([[0], np.sort(rest[order[:max_cuts - 1]])])
+    return CutProfile(
+        name=name,
+        total_cost=float(prefix[-1]),
+        cuts=tuple(int(c) for c in cand),
+        local_cost=tuple(float(x) for x in prefix[cand]),
+        remote_cost=tuple(float(x) for x in prefix[-1] - prefix[cand]),
+        comm_bytes=tuple(float(x) for x in bb[cand]),
+    )
+
+
+def profile_cnn(cfg: CNNConfig, batch: int = 1, max_cuts: int = 32,
+                name: Optional[str] = None) -> CutProfile:
+    """Cut profile for a CNN-zoo config (Eq. 5 costs + activation bytes)."""
+    from repro.models import cnn as cnn_mod
+
+    costs = costmodel.cnn_costs(cfg)
+    bb = [cnn_mod.activation_bytes(cfg, i, batch)
+          for i in range(len(costs) + 1)]
+    return profile_costs(costs, bb, name or getattr(cfg, "name", "cnn"),
+                         max_cuts)
+
+
+def profile_transformer(cfg: ModelConfig, seq: int, batch: int,
+                        max_cuts: int = 32,
+                        name: Optional[str] = None) -> CutProfile:
+    """Cut profile for a transformer config (per-block FLOPs + constant
+    hidden-state boundary bytes)."""
+    costs = [costmodel.block_flops(cfg, ld, seq, batch)
+             for ld in cfg.layer_defs]
+    bb = [costmodel.boundary_bytes(cfg, seq, batch)] * (len(costs) + 1)
+    return profile_costs(costs, bb,
+                         name or getattr(cfg, "name", "transformer"),
+                         max_cuts)

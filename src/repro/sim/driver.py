@@ -84,7 +84,8 @@ class AsyncEngineDriver:
                  forecast=None, slot_hours: float = 0.5,
                  slo_latency_s: Optional[float] = None,
                  tick_hours: float = 0.0,
-                 clients: Optional[ClosedLoopClientPool] = None):
+                 clients: Optional[ClosedLoopClientPool] = None,
+                 risk_coverage: Optional[float] = None):
         if arrivals is None and clients is None:
             raise ValueError("need an arrival process, a closed-loop "
                              "client pool, or both")
@@ -97,6 +98,14 @@ class AsyncEngineDriver:
         self.batch_window_hours = batch_window_hours
         self.forecast = forecast
         self.slot_hours = slot_hours
+        # Risk-bounded deferral planning (DESIGN.md §8): with a coverage
+        # level set, deferrable arrivals are planned through
+        # plan_wake_risk — a task parks only when the forecast's conformal
+        # interval says the future slot beats executing now even at the
+        # interval's pessimistic end. None keeps point-forecast planning.
+        if risk_coverage is not None and not 0.0 < risk_coverage < 1.0:
+            raise ValueError("risk_coverage must be in (0, 1) or None")
+        self.risk_coverage = risk_coverage
         self.tick_hours = tick_hours
         # Closed-loop mode (DESIGN.md §7): `clients` drives CLIENT_READY /
         # RETRY events and the task_factory is called as
@@ -123,6 +132,11 @@ class AsyncEngineDriver:
         cluster = getattr(self.executor, "cluster", None)
         if cluster is None:
             return now
+        if self.risk_coverage is not None:
+            from repro.core.temporal import plan_wake_risk
+            return plan_wake_risk(self.forecast, cluster, task, now,
+                                  slot_hours=self.slot_hours,
+                                  coverage=self.risk_coverage)
         from repro.core.temporal import plan_wake
         return plan_wake(self.forecast, cluster, task, now,
                          slot_hours=self.slot_hours)

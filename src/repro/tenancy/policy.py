@@ -49,6 +49,7 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.api import intensity_interval_batch
 from repro.core.energy import carbon_g
 from repro.core.scheduler import MODES, Task, Weights, node_feasible
 from repro.tenancy.spec import (ESCALATION_BOUNDS, MODE_ORDER, TenantRegistry,
@@ -119,7 +120,8 @@ class TenantPolicy:
 
     def __init__(self, inner=None, registry: Optional[TenantRegistry] = None,
                  *, energy_model: Optional[Callable] = None,
-                 escalation_bounds: Sequence[float] = ESCALATION_BOUNDS):
+                 escalation_bounds: Sequence[float] = ESCALATION_BOUNDS,
+                 defer_risk_coverage: Optional[float] = None):
         if inner is None:
             from repro.core.policy import VectorizedPolicy
             inner = VectorizedPolicy()
@@ -127,6 +129,13 @@ class TenantPolicy:
         self.registry = registry if registry is not None else TenantRegistry()
         self.energy_model = energy_model or cluster_energy_model
         self._bounds = np.asarray(escalation_bounds, dtype=float)
+        # Risk-bounded deferral (DESIGN.md §8): when set, a budget DEFER
+        # must also be defensible against the provider's conformal
+        # intensity interval at this coverage level, else it downgrades
+        # to REJECT. None (default) keeps the point-forecast behaviour.
+        if defer_risk_coverage is not None and not 0.0 < defer_risk_coverage < 1.0:
+            raise ValueError("defer_risk_coverage must be in (0, 1) or None")
+        self.defer_risk_coverage = defer_risk_coverage
 
     def register(self, spec: TenantSpec) -> TenantSpec:
         return self.registry.register(spec)
@@ -258,16 +267,51 @@ class TenantPolicy:
         can_defer = (reg.defer_ok[ts] & np.isfinite(reg.period_hours[ts])
                      & (es <= allow))
         act_s = np.where(ok, ADMIT, np.where(can_defer, DEFER, REJECT))
+        wake_s = np.where(act_s == DEFER,
+                          reg.next_period_start()[ts], np.inf)
+        if self.defer_risk_coverage is not None and provider is not None:
+            act_s = self._risk_defer_gate(provider, names, act_s, wake_s,
+                                          g[order], now_hour)
+            wake_s[act_s != DEFER] = np.inf
         pos = reg_pos[order]
         actions[pos] = act_s
         modes[pos] = mode_s
-        wake[pos] = np.where(act_s == DEFER,
-                             reg.next_period_start()[ts], np.inf)
+        wake[pos] = wake_s
         np.add.at(reg.admitted, ts[act_s == ADMIT], 1)
         np.add.at(reg.deferred, ts[act_s == DEFER], 1)
         np.add.at(reg.rejected, ts[act_s == REJECT], 1)
         return AdmissionPlan(actions, modes, tid, expected, greenest, wake,
                              list(names), ints, e_kwh, pue)
+
+    def _risk_defer_gate(self, provider, names, act: np.ndarray,
+                         wake: np.ndarray, gidx: np.ndarray,
+                         now_hour: float) -> np.ndarray:
+        """Risk-bounded deferral (DESIGN.md §8): a budget DEFER survives
+        only while the conformal intensity interval at its wake hour could
+        still be at least as good as executing now on the task's greenest
+        feasible node — ``lo_wake <= hi_now``. When even the optimistic
+        wake-hour bound certainly loses (``lo_wake > hi_now``), deferral
+        burns the client's time for provably worse carbon, so the task is
+        REJECTed outright instead. Zero-width (measured/static) intervals
+        keep every DEFER — the gate only bites when a calibrated forecast
+        is confidently pessimistic about the wake window. One batched
+        interval read per distinct wake hour; nowhere-feasible tasks
+        (``gidx < 0``) are admission-priced at zero and pass through."""
+        d = np.nonzero((act == DEFER) & (gidx >= 0) & np.isfinite(wake))[0]
+        if not d.size:
+            return act
+        cov = self.defer_risk_coverage
+        _, hi_now = intensity_interval_batch(provider, names, now_hour,
+                                             coverage=cov)
+        hi_now = np.asarray(hi_now, dtype=float)
+        for h in np.unique(wake[d]):
+            sel = d[wake[d] == h]
+            lo_w, _ = intensity_interval_batch(provider, names, float(h),
+                                               coverage=cov)
+            lo_w = np.asarray(lo_w, dtype=float)
+            gs = gidx[sel]
+            act[sel[lo_w[gs] > hi_now[gs]]] = REJECT
+        return act
 
     # -- phase 2: placement ------------------------------------------------
     def select_admitted(self, cluster, tasks: Sequence[Task],

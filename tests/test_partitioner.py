@@ -96,3 +96,175 @@ def test_moe_active_cost_used():
     assert active < 0.1 * total
     f = costmodel.block_flops(cfg, ld, seq=1024, batch=1)
     assert f < 2.5 * 1024 * active * 1.2
+
+
+# ---------------------------------------------------------------------------
+# degenerate shapes, node ids, green-weight clamping (regressions)
+# ---------------------------------------------------------------------------
+
+
+def test_partition_zero_nodes_raises():
+    with pytest.raises(ValueError):
+        partition_costs([1.0, 2.0], [])
+
+
+def test_partition_single_node_shapes():
+    p = partition_costs([1.0, 2.0, 3.0], [1.0])
+    assert p.boundaries == (0, 3)
+    assert p.segment_costs == (6.0,)
+    assert p.comm_bytes == ()
+    assert p.node_order == ("0",)
+    assert p.num_segments == 1 == len(p.node_order) == len(p.comm_bytes) + 1
+
+
+def test_partition_fewer_layers_than_nodes_shapes():
+    # 2 layers, 4 nodes: only the first two nodes get a segment, and every
+    # tuple stays consistent with num_segments
+    p = partition_costs([5.0, 5.0], [1.0, 1.0, 1.0, 1.0],
+                        node_ids=["a", "b", "c", "d"])
+    assert p.boundaries[0] == 0 and p.boundaries[-1] == 2
+    assert p.num_segments == 2
+    assert p.node_order == ("a", "b")
+    assert len(p.segment_costs) == 2 and len(p.comm_bytes) == 1
+
+
+def test_partition_empty_costs_shapes():
+    p = partition_costs([], [1.0, 1.0])
+    assert p.boundaries == (0, 0)
+    assert p.segment_costs == (0.0,)
+    assert p.node_order == ("0",)
+
+
+def test_partition_node_ids_label_segments():
+    p = partition_costs([1.0] * 30, [2.0, 1.0], node_ids=["big", "small"])
+    assert p.node_order == ("big", "small")
+    with pytest.raises(ValueError):
+        partition_costs([1.0] * 30, [2.0, 1.0], node_ids=["only-one"])
+
+
+def test_partition_front_ends_accept_node_ids():
+    p = partition_cnn(get_cnn_config("mobilenetv2"), [1.0, 1.0, 1.0],
+                      node_ids=["x", "y", "z"])
+    assert p.node_order == ("x", "y", "z")
+
+
+def test_green_weights_zero_intensity_finite():
+    # a zero-carbon node must clamp, not divide to inf/NaN
+    w = green_weights([1.0, 1.0, 1.0], [0.0, 100.0, 500.0])
+    assert np.all(np.isfinite(w)) and w.sum() == pytest.approx(1.0)
+    assert w[0] > w[1] > w[2]          # cleanest grid still wins
+    w_all0 = green_weights([2.0, 1.0], [0.0, 0.0])
+    assert np.all(np.isfinite(w_all0))
+    assert w_all0[0] > w_all0[1]       # degenerates to capacity ordering
+
+
+# ---------------------------------------------------------------------------
+# brute-force DP parity (hypothesis-backed when available)
+# ---------------------------------------------------------------------------
+
+try:  # optional extra — see pyproject.toml
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*args, **kwargs):      # no-op stand-ins so the hypothesis
+        return lambda f: f           # tests below stay defined once and
+
+    def settings(*args, **kwargs):   # are reported as skipped
+        return lambda f: f
+
+    class _NoStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NoStrategies()
+
+requires_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="hypothesis not installed — pip install -e .[test]")
+
+
+def _brute_force_objective(costs, weights, bb, comm_weight):
+    """Enumerate every placement of k-1 cuts; return the minimal
+    bottleneck+comm objective with the DP's exact arithmetic (same prefix
+    sums, same cap epsilon, comm billed to the segment the cut starts)."""
+    import itertools
+
+    L, k = len(costs), len(weights)
+    prefix = np.concatenate([[0.0], np.cumsum(np.asarray(costs, float))])
+    w = np.asarray(weights, dtype=np.float64)
+    share = w / w.sum()
+    total = prefix[-1]
+    best = np.inf
+    for cuts in itertools.combinations(range(1, L), k - 1):
+        bounds = (0,) + cuts + (L,)
+        val = 0.0
+        for s in range(k):
+            a, b = bounds[s], bounds[s + 1]
+            cap = share[s] * total + 1e-12
+            load = (prefix[b] - prefix[a]) / cap
+            comm = comm_weight * bb[a] if a > 0 else 0.0
+            val = max(val, load + comm)
+        best = min(best, val)
+    return best
+
+
+def _dp_objective(p, costs, weights, bb, comm_weight):
+    prefix = np.concatenate([[0.0], np.cumsum(np.asarray(costs, float))])
+    w = np.asarray(weights, dtype=np.float64)
+    share = w / w.sum()
+    total = prefix[-1]
+    val = 0.0
+    for s, (a, b) in enumerate(p.segments()):
+        cap = share[s] * total + 1e-12
+        comm = comm_weight * bb[a] if a > 0 else 0.0
+        val = max(val, (prefix[b] - prefix[a]) / cap + comm)
+    return val
+
+
+@requires_hypothesis
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_dp_matches_brute_force(data):
+    L = data.draw(st.integers(3, 9), label="L")
+    k = data.draw(st.integers(2, min(4, L)), label="k")
+    costs = data.draw(st.lists(st.floats(0.1, 50.0), min_size=L,
+                               max_size=L), label="costs")
+    weights = data.draw(st.lists(st.floats(0.2, 4.0), min_size=k,
+                                 max_size=k), label="weights")
+    bb = data.draw(st.lists(st.floats(0.0, 100.0), min_size=L + 1,
+                            max_size=L + 1), label="bb")
+    comm_weight = data.draw(st.sampled_from([0.0, 0.01, 0.5]),
+                            label="comm_weight")
+    p = partition_costs(costs, weights, bb, comm_weight)
+    got = _dp_objective(p, costs, weights, bb, comm_weight)
+    want = _brute_force_objective(costs, weights, bb, comm_weight)
+    assert got == pytest.approx(want, rel=1e-12, abs=1e-12)
+
+
+def test_dp_matches_brute_force_deterministic():
+    # always-on version of the property above (fixed seeds)
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        L = int(rng.integers(3, 10))
+        k = int(rng.integers(2, min(5, L + 1)))
+        costs = rng.uniform(0.1, 50.0, L)
+        weights = rng.uniform(0.2, 4.0, k)
+        bb = rng.uniform(0.0, 100.0, L + 1)
+        cwt = float(rng.choice([0.0, 0.01, 0.5]))
+        p = partition_costs(costs, weights, bb, cwt)
+        got = _dp_objective(p, costs, weights, bb, cwt)
+        want = _brute_force_objective(costs, weights, bb, cwt)
+        assert got == pytest.approx(want, rel=1e-12, abs=1e-12)
+
+
+def test_dp_tie_determinism():
+    # uniform costs + equal weights: many optimal cut placements tie; the
+    # DP must return the same boundaries on every run (strict-< keeps the
+    # first optimum found in iteration order)
+    costs = [1.0] * 12
+    runs = {partition_costs(costs, [1.0, 1.0, 1.0],
+                            [0.0] * 13, 0.25).boundaries
+            for _ in range(10)}
+    assert len(runs) == 1
