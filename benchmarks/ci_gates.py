@@ -9,6 +9,7 @@ function here, so a red CI can be reproduced and debugged from a checkout:
     PYTHONPATH=src:. python -m benchmarks.ci_gates sim
     PYTHONPATH=src:. python -m benchmarks.ci_gates tenancy
     PYTHONPATH=src:. python -m benchmarks.ci_gates partition
+    PYTHONPATH=src:. python -m benchmarks.ci_gates obs
     PYTHONPATH=src:. python -m benchmarks.ci_gates trend --baseline PREV.json
 
 (or ``python -m benchmarks.run --gate NAME`` — same registry.)
@@ -41,6 +42,13 @@ Gates:
   planning satisfying the never-defer invariant at tight AND wide
   conformal bands, and split-conformal held-out coverage >= 0.87 against
   the 90% target; writes BENCH_partition.json.
+- **obs** — observability (DESIGN.md §9): a fixed-seed sim renders a
+  byte-identical ``metrics.to_text`` whether obs is absent, disabled, or
+  fully enabled (both execute paths); with trace + metrics + profiler all
+  ON, the end-to-end ``engine.step`` stays <= 1.25x the disabled path on
+  the N=10^4, B=1024 acceptance row (median of interleaved adjacent-pair
+  ratios; small rows where fixed costs dominate get a loose backstop) and
+  never changes a decision; writes BENCH_obs.json.
 - **trend** — compare this checkout's fleet-scale end-to-end per-task
   times against a previous run's ``BENCH_fleet_scale.json`` (CI restores
   the last main-branch run via actions/cache) and fail on a >2x relative
@@ -162,6 +170,30 @@ def gate_partition(out_path: str = "BENCH_partition.json") -> Dict:
     return out
 
 
+def gate_obs(out_path: str = "BENCH_obs.json") -> Dict:
+    from benchmarks import obs_overhead
+
+    out = obs_overhead.run(smoke=True, out_path=out_path)
+    for key, ok in out["byte_identity"].items():
+        assert ok, f"sim metrics text diverged with obs wired: {key}"
+    bound = out["overhead_bound_x"]
+    for r in out["rows"]:
+        # the disabled path must stay a normal engine step (same loose
+        # absolute backstop as the other gates)
+        assert r["disabled_per_task_ms"] < 0.5, r
+        if (r["n_nodes"], r["batch"]) == (10_000, 1024):
+            # the acceptance bound is defined at this row, where per-task
+            # work dominates the per-step fixed costs
+            assert r["overhead_x"] <= bound, r
+        else:
+            # small rows amortize the fixed per-step obs cost over few
+            # tasks — only a coarse sanity backstop applies
+            assert r["overhead_x"] <= 3.0, r
+    assert any((r["n_nodes"], r["batch"]) == (10_000, 1024)
+               for r in out["rows"]), "acceptance row missing from sweep"
+    return out
+
+
 def _trend_rows(bench: Dict) -> Dict[tuple, float]:
     """(section, n_nodes, batch) -> per-task ms for the rows the trend
     gate tracks: cached selection and the end-to-end batched step."""
@@ -215,6 +247,7 @@ GATES: Dict[str, Callable] = {
     "sim": gate_sim,
     "tenancy": gate_tenancy,
     "partition": gate_partition,
+    "obs": gate_obs,
     "trend": gate_trend,
 }
 

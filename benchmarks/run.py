@@ -12,10 +12,10 @@ from __future__ import annotations
 
 def main() -> None:
     from benchmarks import (fig2_tradeoff, fig3_weight_sweep, fleet_scale,
-                            overhead, partition_scale, roofline, sim_serving,
-                            table2_carbon_footprint, table4_multi_model,
-                            table5_node_distribution, temporal_shifting,
-                            tenancy_saturation)
+                            obs_overhead, overhead, partition_scale, roofline,
+                            sim_serving, table2_carbon_footprint,
+                            table4_multi_model, table5_node_distribution,
+                            temporal_shifting, tenancy_saturation)
 
     rows = []
 
@@ -99,6 +99,14 @@ def main() -> None:
     rows.append(("partition_conformal_coverage", 0.0,
                  f"heldout={pt['conformal']['heldout_coverage']:.3f}"))
 
+    ob = obs_overhead.run()
+    acc_row = max(ob["rows"], key=lambda r: (r["n_nodes"] == 10_000,
+                                             r["n_nodes"], r["batch"]))
+    rows.append((f"obs_enabled_step_{acc_row['n_nodes']}n"
+                 f"_{acc_row['batch']}b",
+                 acc_row["enabled_per_task_ms"] * 1e3,
+                 f"overhead_x={acc_row['overhead_x']:.2f}"))
+
     for r in roofline.load():
         rows.append((f"roofline_{r['arch']}_{r['shape']}",
                      r["step_time_s"] * 1e6,
@@ -116,8 +124,8 @@ if __name__ == "__main__":
     parser.add_argument("--gate", default=None,
                         help="run a CI gate from benchmarks.ci_gates "
                              "('overhead', 'fleet', 'sim', 'tenancy', "
-                             "'partition', 'trend', 'all') instead of the "
-                             "benchmark CSV")
+                             "'partition', 'obs', 'trend', 'all') instead "
+                             "of the benchmark CSV")
     parser.add_argument("--baseline", default=None,
                         help="baseline BENCH_fleet_scale.json for --gate trend")
     cli = parser.parse_args()

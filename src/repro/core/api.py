@@ -24,12 +24,14 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass
+from time import perf_counter
 from typing import Dict, List, Mapping, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
 from repro.core.carbon import CarbonMonitor
 from repro.core.cluster import EdgeCluster, TaskResult
+from repro.core.energy import carbon_g
 from repro.core.scheduler import MODES, Task, Weights
 
 
@@ -441,7 +443,8 @@ class CarbonEdgeEngine:
                  provider: Optional[CarbonIntensityProvider] = None,
                  monitor: Optional[CarbonMonitor] = None,
                  batch_size: Optional[int] = None,
-                 batch_execute: bool = True):
+                 batch_execute: bool = True,
+                 obs=None):
         self.cluster = cluster
         # Batched execute+billing fast path (DESIGN.md §6), on by default;
         # False forces the per-task loop — the bit-exact parity oracle
@@ -497,6 +500,32 @@ class CarbonEdgeEngine:
                 # same PUE as the cluster's execution ledger, so totals and
                 # per_region carbon agree
                 self.monitor.register_region(name, pue=cluster.pue)
+        # Cheap always-on step accounting (surfaced by report()): steps
+        # drained and cumulative done/reject/defer verdict totals.
+        self._steps = 0
+        self._outcome_totals = {"done": 0, "reject": 0, "defer": 0}
+        # Observability hub (DESIGN.md §9): a repro.obs.Observability with
+        # any pillar enabled; None (the default) keeps every path
+        # bit-identical at the cost of one `is not None` check per phase.
+        self.obs = obs if obs is not None and obs.enabled else None
+        self._exec_snapshot = None
+        if self.obs is not None:
+            self._wire_obs()
+
+    def _wire_obs(self) -> None:
+        """Attach the enabled obs pillars to the policy's duck-typed hooks
+        (`capture_scores` publishes winning/runner-up totals on
+        ``policy.last_scores``; `profiler` receives featurize/score
+        spans), and resolve the engine's mode index for the trace."""
+        obs, pol = self.obs, self.policy
+        if obs.trace is not None and hasattr(pol, "capture_scores"):
+            pol.capture_scores = True
+        if obs.profiler is not None and hasattr(pol, "profiler"):
+            pol.profiler = obs.profiler
+        # == repro.obs.MODE_LABELS == repro.tenancy.spec.MODE_ORDER
+        labels = ("performance", "balanced", "green")
+        self._mode_idx = next((i for i, m in enumerate(labels)
+                               if MODES[m] == self.weights), -1)
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, task: Task) -> "CarbonEdgeEngine":
@@ -525,17 +554,24 @@ class CarbonEdgeEngine:
         driver steps exactly the tasks whose arrival events have fired).
         """
         self.last_outcomes = None
+        self._exec_snapshot = None
         if not self.queue:
             return []
         b = limit if limit is not None else (self.batch_size or len(self.queue))
         batch, self.queue = self.queue[:b], self.queue[b:]
         results: List[TaskResult] = []
+        self._steps += 1
         if self._tenancy is not None:
             return self._step_tenancy(batch, now_hour, results)
+        obs = self.obs
+        prof = obs.profiler if obs is not None else None
         try:
+            t0 = perf_counter() if prof is not None else 0.0
             choices = self.policy.select_batch(
                 self.cluster, batch, self.weights, provider=self.provider,
                 now_hour=now_hour)
+            if prof is not None:
+                prof.add("select", perf_counter() - t0)
             # Partitioned-execution hook (DESIGN.md §8): a policy exposing
             # execution_latency_ms (e.g. repro.partition.PartitionPolicy)
             # makes the engine execute and bill only the offloaded
@@ -554,7 +590,12 @@ class CarbonEdgeEngine:
             # error) put everything not successfully executed back at the
             # head of the queue, so submitted work is never silently lost.
             self.queue = list(batch[len(results):]) + self.queue
+            self._outcome_totals["done"] += len(results)
             raise
+        self._outcome_totals["done"] += len(results)
+        if obs is not None:
+            # success-only (failed steps requeue and re-trace on retry)
+            self._obs_record_step(obs, results, now_hour)
         return results
 
     def _step_tenancy(self, batch: Sequence[Task], now_hour: float,
@@ -566,10 +607,15 @@ class CarbonEdgeEngine:
         subset is placed (mode-escalated), executed and billed — with the
         executed prefix's carbon charged back per tenant even when the
         batch fails mid-way."""
+        obs = self.obs
+        prof = obs.profiler if obs is not None else None
         try:
+            t0 = perf_counter() if prof is not None else 0.0
             plan = self.policy.plan(self.cluster, batch,
                                     provider=self.provider,
                                     now_hour=now_hour)
+            if prof is not None:
+                prof.add("plan", perf_counter() - t0)
         except BaseException:
             # admission itself failed (e.g. a partial-coverage provider
             # KeyError): nothing was consumed, so the whole batch requeues
@@ -586,16 +632,24 @@ class CarbonEdgeEngine:
             from repro.tenancy.policy import REJECT as _REJECT
             aidx = plan.admitted_index()
             exec_tasks = [batch[i] for i in aidx]
-            for i in np.nonzero(plan.actions == _REJECT)[0]:
+            rej = np.nonzero(plan.actions == _REJECT)[0]
+            deferred = np.nonzero(plan.actions == _DEFER)[0]
+            for i in rej:
                 outcomes[i] = ("reject", "carbon budget exhausted")
-            for i in np.nonzero(plan.actions == _DEFER)[0]:
+            for i in deferred:
                 w = float(plan.wake_hour[i])
                 self.deferred.append((w, batch[i]))
                 outcomes[i] = ("defer", w)
+            # rejected/deferred verdicts are consumed whatever happens next
+            self._outcome_totals["reject"] += int(rej.size)
+            self._outcome_totals["defer"] += int(deferred.size)
         try:
+            t0 = perf_counter() if prof is not None else 0.0
             full = self.policy.select_admitted(
                 self.cluster, batch, plan, self.weights,
                 provider=self.provider, now_hour=now_hour)
+            if prof is not None:
+                prof.add("select", perf_counter() - t0)
             choices = (full if aidx is None
                        else [full[i] for i in aidx])
             if self.batch_execute:
@@ -628,6 +682,11 @@ class CarbonEdgeEngine:
             for j, res in zip(pos, results):
                 outcomes[j] = ("done", res)
             self.last_outcomes = outcomes
+            self._outcome_totals["done"] += len(results)
+        if obs is not None:
+            # success-only, like the tenancy-free path
+            self._obs_record_tenancy(obs, batch, plan, results, now_hour,
+                                     aidx)
         return results
 
     def pop_ripe(self, now_hour: float) -> List[Task]:
@@ -757,13 +816,19 @@ class CarbonEdgeEngine:
                         bv = np.array([bill_int[n] for n in uniq],
                                       dtype=float)
         if nodes:
+            obs = self.obs
+            prof = obs.profiler if obs is not None else None
             base = (np.array([t.base_latency_ms for t in batch[:cut]],
                              dtype=float)
                     if base_override is None
                     else np.asarray(base_override[:cut], dtype=float))
+            t0 = perf_counter() if prof is not None else 0.0
             res = self.cluster.execute_batch(nodes, base, distributed=True,
                                              intensities=ev[inverse],
                                              groups=groups)
+            if prof is not None:
+                prof.add("execute", perf_counter() - t0)
+                t0 = perf_counter()
             # The billed energy is recomputed through the cluster's own
             # cost model (the same call execute_batch makes) rather than
             # gathered back out of the B result objects — same floats, no
@@ -772,7 +837,15 @@ class CarbonEdgeEngine:
             self.monitor.record_energy_batch(
                 nodes, e_kwh, hour=now_hour, intensities=bv[inverse],
                 groups=groups)
+            if prof is not None:
+                prof.add("bill", perf_counter() - t0)
             results.extend(res)
+            if obs is not None and (obs.trace is not None
+                                    or obs.metrics is not None):
+                # stash the already-computed batched arrays so the trace/
+                # metrics record after a successful step adds no provider
+                # re-reads or O(B) Python (DESIGN.md §9)
+                self._exec_snapshot = (uniq, inverse, ev, bv, e_kwh)
         if failure is not None:
             # `results` is the shared list step() requeues against, so the
             # exception's executed-prefix view matches the scalar loop's.
@@ -852,14 +925,233 @@ class CarbonEdgeEngine:
         rep["end_hour"] = now
         return rep
 
+    # -- observability (DESIGN.md §9) --------------------------------------
+    def _obs_metrics_nodes(self, metrics, uniq, inverse, carbon) -> None:
+        """Per-node task and carbon counters from the step's grouped
+        arrays: O(distinct nodes) label interning, scatter-add updates."""
+        counts = np.bincount(inverse, minlength=len(uniq))
+        csum = np.bincount(inverse, weights=carbon, minlength=len(uniq))
+        for name, help_, vals in (
+                ("engine_tasks_total", "tasks executed per node", counts),
+                ("engine_carbon_g_total",
+                 "carbon billed per node (gCO2)", csum)):
+            fam = metrics.counter(name, help_, ("node",))
+            fam.inc_at(fam.rows([(str(n),) for n in uniq]), vals)
+
+    def _obs_metrics_depths(self, metrics) -> None:
+        metrics.gauge("engine_queue_depth",
+                      "tasks pending in the engine queue"
+                      ).set(float(len(self.queue)))
+        metrics.gauge("engine_deferred_depth",
+                      "budget-deferred tasks parked"
+                      ).set(float(len(self.deferred)))
+
+    def _obs_intervals(self, uniq, inverse, now_hour):
+        """Conformal (lo, hi) per task when the provider carries a
+        calibrator, else (None, None) — zero-width intervals from plain
+        providers carry no information, so skip the extra read."""
+        if getattr(self.provider, "conformal", None) is None:
+            return None, None
+        lo, hi = intensity_interval_batch(self.provider, list(uniq),
+                                          now_hour)
+        return (np.asarray(lo, dtype=float)[inverse],
+                np.asarray(hi, dtype=float)[inverse])
+
+    def _obs_record_step(self, obs, results, now_hour: float) -> None:
+        """Trace + metrics for one successful tenancy-free step, fed from
+        the batched-execute snapshot (no per-task Python; the scalar
+        parity oracle falls back to gathering from its B results)."""
+        trace, metrics = obs.trace, obs.metrics
+        if trace is None and metrics is None:
+            return
+        prof = obs.profiler
+        t0 = perf_counter() if prof is not None else 0.0
+        B = len(results)
+        if B == 0:
+            return
+        snap = self._exec_snapshot
+        if snap is not None:
+            uniq, inverse, ev, bv, e_kwh = snap
+            ev_t = ev[inverse]
+            # same expression execute_batch billed with — identical floats
+            carbon = carbon_g(e_kwh, ev_t, self.cluster.pue)
+        else:
+            uniq, inverse = np.unique(
+                np.asarray([r.node for r in results], dtype=object),
+                return_inverse=True)
+            ev = np.asarray(intensity_batch(self.provider, list(uniq),
+                                            now_hour), dtype=float)
+            ev_t = ev[inverse]
+            bv = np.asarray(self.monitor.billing_intensity_batch(
+                list(uniq), now_hour), dtype=float)
+            carbon = np.asarray([r.carbon_g for r in results], dtype=float)
+        if trace is not None:
+            lo, hi = self._obs_intervals(uniq, inverse, now_hour)
+            score = runner = cut = None
+            ls = getattr(self.policy, "last_scores", None)
+            if ls is not None and ls.get("score") is not None \
+                    and len(ls["score"]) == B:
+                score, runner = ls["score"], ls.get("runner_up")
+                cut = ls.get("cut")
+            trace.record_batch(
+                step=self._steps, hour=now_hour,
+                verdict=np.zeros(B, dtype=np.int8),   # all done
+                node=trace.intern_names(uniq)[inverse],
+                cut=cut, mode=self._mode_idx,
+                score=score, runner_up=runner,
+                intensity=ev_t, interval_lo=lo, interval_hi=hi,
+                intensity_billed=bv[inverse], carbon_g=carbon)
+        if metrics is not None:
+            self._obs_metrics_nodes(metrics, uniq, inverse, carbon)
+            metrics.counter("engine_outcomes_total",
+                            "step outcomes by verdict", ("verdict",)
+                            ).inc(B, labels=("done",))
+            self._obs_metrics_depths(metrics)
+        if prof is not None:
+            prof.add("observe", perf_counter() - t0)
+
+    def _obs_record_tenancy(self, obs, batch, plan, results, now_hour,
+                            aidx) -> None:
+        """Trace + metrics for one successful admission-controlled step:
+        full-length rows (rejected/deferred tasks get their verdict with
+        no placement), executed columns scattered at the admitted
+        positions from the batched-execute snapshot."""
+        trace, metrics = obs.trace, obs.metrics
+        if trace is None and metrics is None:
+            return
+        prof = obs.profiler
+        t0 = perf_counter() if prof is not None else 0.0
+        from repro.tenancy.policy import ADMIT as _ADMIT
+        from repro.tenancy.policy import REJECT as _REJECT
+        B = len(batch)
+        # explicit action -> trace-verdict map (the two encodings order
+        # DEFER/REJECT differently)
+        verdict = np.where(
+            plan.actions == _ADMIT, 0,
+            np.where(plan.actions == _REJECT, 1, 2)).astype(np.int8)
+        pos_exec = (np.arange(len(results)) if aidx is None
+                    else np.asarray(aidx))
+        uniq = inverse = carbon = None
+        if results:
+            snap = self._exec_snapshot
+            if snap is not None:
+                uniq, inverse, ev, bv, e_kwh = snap
+                ev_t = ev[inverse]
+                carbon = carbon_g(e_kwh, ev_t, self.cluster.pue)
+            else:
+                uniq, inverse = np.unique(
+                    np.asarray([r.node for r in results], dtype=object),
+                    return_inverse=True)
+                ev = np.asarray(intensity_batch(self.provider, list(uniq),
+                                                now_hour), dtype=float)
+                ev_t = ev[inverse]
+                bv = np.asarray(self.monitor.billing_intensity_batch(
+                    list(uniq), now_hour), dtype=float)
+                carbon = np.asarray([r.carbon_g for r in results],
+                                    dtype=float)
+        if trace is not None:
+            node = np.full(B, -1, dtype=np.int32)
+            intens = np.full(B, np.nan)
+            billed = np.full(B, np.nan)
+            carb = np.full(B, np.nan)
+            ilo = ihi = None
+            if results:
+                node[pos_exec] = trace.intern_names(uniq)[inverse]
+                intens[pos_exec] = ev_t
+                billed[pos_exec] = bv[inverse]
+                carb[pos_exec] = carbon
+                lo, hi = self._obs_intervals(uniq, inverse, now_hour)
+                if lo is not None:
+                    ilo = np.full(B, np.nan)
+                    ihi = np.full(B, np.nan)
+                    ilo[pos_exec] = lo
+                    ihi[pos_exec] = hi
+            # -1 (untagged / no escalation) means the engine's own mode
+            modes = np.where(plan.modes >= 0, plan.modes,
+                             self._mode_idx).astype(np.int8)
+            tenant = None
+            reg = getattr(self.policy, "registry", None)
+            index = getattr(reg, "index", None)
+            if index:
+                names = np.asarray(sorted(index, key=index.get),
+                                   dtype=object)
+                tmap = trace.intern_names(names, kind="tenant")
+                tidx = np.asarray(plan.tenant_idx)
+                tenant = np.where(tidx >= 0,
+                                  tmap[np.maximum(tidx, 0)],
+                                  -1).astype(np.int32)
+            score = runner = cut = None
+            ls = getattr(self.policy, "last_scores", None)
+            if ls is not None and ls.get("score") is not None \
+                    and len(ls["score"]) == B:
+                score, runner = ls["score"], ls.get("runner_up")
+                cut = ls.get("cut")
+            trace.record_batch(
+                step=self._steps, hour=now_hour, verdict=verdict,
+                node=node, cut=cut, mode=modes, tenant=tenant,
+                score=score, runner_up=runner,
+                intensity=intens, interval_lo=ilo, interval_hi=ihi,
+                intensity_billed=billed, carbon_g=carb,
+                expected_g=plan.expected_g)
+        if metrics is not None:
+            if results:
+                self._obs_metrics_nodes(metrics, uniq, inverse, carbon)
+            fam = metrics.counter("engine_outcomes_total",
+                                  "step outcomes by verdict", ("verdict",))
+            for code, label in enumerate(("done", "reject", "defer")):
+                n = int((verdict == code).sum())
+                if n:
+                    fam.inc(n, labels=(label,))
+            self._obs_metrics_depths(metrics)
+        if prof is not None:
+            prof.add("observe", perf_counter() - t0)
+
     # -- reporting ---------------------------------------------------------
-    def report(self) -> Dict:
+    def report(self, deep: bool = False) -> Dict:
         rep = {
             "totals": self.cluster.totals(),
             "distribution": self.cluster.distribution(),
             "policy": self.policy.name,
             "per_region": self.monitor.report(),
+            "steps": self._steps,
+            "outcomes": dict(self._outcome_totals),
+            "deferred_depth": len(self.deferred),
         }
         if self._tenancy is not None:
             rep["tenants"] = self._tenancy.registry.report()
+        if deep:
+            rep["deep"] = self._report_deep()
         return rep
+
+    def _report_deep(self) -> Dict:
+        """Structured diagnostics (DESIGN.md §9): obs pillar summaries
+        plus partition / deferral / conformal-coverage aggregates. A
+        diagnostic call — may do O(retained-trace) work."""
+        deep: Dict = {}
+        obs = self.obs
+        if obs is not None:
+            if obs.profiler is not None:
+                deep["profiler"] = obs.profiler.summary()
+            if obs.trace is not None:
+                deep["trace"] = obs.trace.stats()
+                deep["conformal"] = obs.trace.conformal_coverage()
+                cuts = obs.trace.cut_histogram()
+                if cuts:
+                    deep["partition"] = {"cut_histogram": cuts}
+            if obs.metrics is not None:
+                deep["metrics"] = obs.metrics.snapshot()
+        deep["deferral"] = {
+            "parked": len(self.deferred),
+            "deferred_total": self._outcome_totals["defer"],
+            "next_wake": (min(w for w, _ in self.deferred)
+                          if self.deferred else None),
+        }
+        # last-batch partition decisions work without tracing too
+        decisions = getattr(self.policy, "last_decisions", None)
+        if decisions:
+            hist: Dict[int, int] = {}
+            for d in decisions:
+                if d is not None:
+                    hist[d.cut_index] = hist.get(d.cut_index, 0) + 1
+            deep.setdefault("partition", {})["last_batch_cuts"] = hist
+        return deep

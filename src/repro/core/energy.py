@@ -103,3 +103,15 @@ def ledger_add(start: float, values) -> float:
     acc[0] = start
     acc[1:] = vals
     return float(np.add.accumulate(acc)[-1])
+
+
+def ledger_scatter_add(ledger: np.ndarray, idx, values) -> np.ndarray:
+    """Grouped in-place ledger fold: ``ledger[idx[k]] += values[k]`` for
+    each ``k`` in order — the scatter counterpart of :func:`ledger_add`.
+    ``np.add.at`` applies unbuffered sequential updates, so a cell hit by
+    several ``k`` accumulates them in exactly the order a scalar loop
+    would (plain fancy-index ``+=`` would silently drop duplicates). Used
+    by the obs metrics registry (DESIGN.md §9) for per-label counters."""
+    np.add.at(ledger, np.asarray(idx),
+              np.asarray(values, dtype=ledger.dtype))
+    return ledger

@@ -27,6 +27,7 @@ Policies:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from time import perf_counter
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -273,6 +274,15 @@ class VectorizedPolicy:
         # holds. False forces a fresh scoring pass every call — what the
         # fleet-scale featurize benchmarks measure.
         self.use_select_memo = use_select_memo
+        # Observability hooks (DESIGN.md §9), both no-ops by default: a
+        # repro.obs StepProfiler on `profiler` gets featurize/score span
+        # timings; `capture_scores = True` additionally publishes the
+        # winning and runner-up totals of the last select_batch on
+        # `last_scores` ({"score": (B,), "runner_up": (B,)}) without
+        # perturbing any choice.
+        self.profiler = None
+        self.capture_scores = False
+        self.last_scores = None
 
     def _resolved_backend(self) -> str:
         if self.backend != "auto":
@@ -347,11 +357,42 @@ class VectorizedPolicy:
         # Algorithm 1 requires a strictly positive score (best_score init 0).
         if self._resolved_backend() == "pallas":
             idx, val = self._select_pallas_fused(F, weights.as_array())
+            if self.capture_scores:
+                # winner-only kernel: runner-up not materialized
+                self._cap_s.append(np.asarray(val, dtype=float))
+                self._cap_r.append(np.full(len(val), np.nan))
             return [names[b] if v > 0.0 else None for b, v in zip(idx, val)]
         totals = self._score_numpy(F, weights.as_array())
         best = np.argmax(totals, axis=1)
+        if self.capture_scores:
+            self._cap_block(totals, best)
         return [names[b] if totals[i, b] > 0.0 else None
                 for i, b in enumerate(best)]
+
+    # -- score capture (repro.obs decision tracing) ------------------------
+    def _cap_block(self, totals: np.ndarray, best: np.ndarray) -> None:
+        """Stash the winning and runner-up totals of one scored (U, N)
+        block. Runner-up = max over the row with the winner cell masked
+        (-inf when N < 2), computed on a copy so selection is untouched."""
+        U, N = totals.shape
+        rows = np.arange(U)
+        self._cap_s.append(totals[rows, best])
+        if N < 2:
+            self._cap_r.append(np.full(U, -np.inf))
+            return
+        masked = totals.copy()
+        masked[rows, best] = -np.inf
+        self._cap_r.append(masked.max(axis=1))
+
+    def _cap_finalize(self) -> None:
+        """Rep-level capture arrays for the just-scored blocks, in rep
+        order (select_batch expands them to task order)."""
+        self._cap = {
+            "score": (np.concatenate(self._cap_s) if self._cap_s
+                      else np.zeros(0)),
+            "runner_up": (np.concatenate(self._cap_r) if self._cap_r
+                          else np.zeros(0)),
+        }
 
     # -- selection ---------------------------------------------------------
     def select_batch(self, cluster: EdgeCluster, tasks: Sequence[Task],
@@ -373,7 +414,17 @@ class VectorizedPolicy:
                 reps.append(t)
         chosen = self._select_unique(cluster, reps, weights, provider,
                                      now_hour)
-        return [chosen[uniq[key]] for key in keys]
+        if not self.capture_scores:
+            return [chosen[uniq[key]] for key in keys]
+        # expand rep-level capture to task order with the same index map;
+        # fromiter over map(dict.__getitem__) builds the index at C speed
+        # and the object-array gather + tolist replaces the off path's
+        # per-task dict-lookup listcomp — capture costs ~the off path
+        idx = np.fromiter(map(uniq.__getitem__, keys), np.intp,
+                          count=len(keys))
+        self.last_scores = {k: np.asarray(v)[idx]
+                            for k, v in self._cap.items()}
+        return np.asarray(chosen, dtype=object)[idx].tolist()
 
     # Above this fleet size the numpy backend scores straight from the
     # cache's column arrays (one (N,) task-independent component base per
@@ -387,20 +438,39 @@ class VectorizedPolicy:
 
     def _select_unique(self, cluster, reps: Sequence[Task], weights: Weights,
                        provider, now_hour: float) -> List[Optional[str]]:
+        cap = self.capture_scores
+        if cap:
+            self._cap_s, self._cap_r = [], []
+            self.last_scores = None
         cache = get_cache(cluster) if self.use_cache else None
         if cache is None:
+            prof = self.profiler
+            t0 = perf_counter() if prof is not None else 0.0
             F, names = featurize(cluster, reps, provider, now_hour,
                                  self.latency_threshold_ms)
-            return self._select_from_features(F, names, weights)
+            if prof is not None:
+                prof.add("featurize", perf_counter() - t0)
+                t0 = perf_counter()
+            out = self._select_from_features(F, names, weights)
+            if prof is not None:
+                prof.add("score", perf_counter() - t0)
+            if cap:
+                self._cap_finalize()
+            return out
         if not self.use_select_memo:
-            return self._select_cached(cache, reps, weights, provider,
-                                       now_hour)
+            out = self._select_cached(cache, reps, weights, provider,
+                                      now_hour)
+            if cap:
+                self._cap_finalize()
+            return out
         memo = getattr(cache, "_sel_memo", None)
         if memo is None:
             memo = cache._sel_memo = _SelectionMemo()
         memo.sync_epoch(cache, provider, now_hour)
+        # `cap` is part of the key: capture-on tables store
+        # (choice, score, runner_up) triples, plain tables bare choices
         cfg = (self._resolved_backend(), self.latency_threshold_ms,
-               weights.as_array().tobytes())
+               weights.as_array().tobytes(), cap)
         table = memo.map.setdefault(cfg, {})   # hash cfg once, not per key
         keys = [(t.cpu, t.mem_mb) for t in reps]
         missing = [i for i, k in enumerate(keys) if k not in table]
@@ -413,9 +483,24 @@ class VectorizedPolicy:
                 # per task. Dropping it wholesale is cheap — a workload
                 # with that many live profiles gets no hits anyway.
                 table.clear()
-            for i, ch in zip(missing, chosen):
-                table[keys[i]] = ch
-        return [table[k] for k in keys]
+            if cap:
+                ms = np.concatenate(self._cap_s) if self._cap_s \
+                    else np.zeros(0)
+                mr = np.concatenate(self._cap_r) if self._cap_r \
+                    else np.zeros(0)
+                for j, (i, ch) in enumerate(zip(missing, chosen)):
+                    table[keys[i]] = (ch, float(ms[j]), float(mr[j]))
+            else:
+                for i, ch in zip(missing, chosen):
+                    table[keys[i]] = ch
+        if not cap:
+            return [table[k] for k in keys]
+        entries = [table[k] for k in keys]
+        self._cap = {
+            "score": np.array([e[1] for e in entries]),
+            "runner_up": np.array([e[2] for e in entries]),
+        }
+        return [e[0] for e in entries]
 
     def _select_cached(self, cache, reps: Sequence[Task], weights: Weights,
                        provider, now_hour: float) -> List[Optional[str]]:
@@ -426,11 +511,18 @@ class VectorizedPolicy:
                                                provider, now_hour)
         names = cache.names
         chunk = max(1, self._CHUNK_ELEMS // max(cache.n, 1))
+        prof = self.profiler
         out: List[Optional[str]] = []
         for lo in range(0, len(reps), chunk):
+            t0 = perf_counter() if prof is not None else 0.0
             F, _ = featurize_cached(cache, reps[lo:lo + chunk], provider,
                                     now_hour, self.latency_threshold_ms)
+            if prof is not None:
+                prof.add("featurize", perf_counter() - t0)
+                t0 = perf_counter()
             out.extend(self._select_from_features(F, names, weights))
+            if prof is not None:
+                prof.add("score", perf_counter() - t0)
         return out
 
     def _select_cached_columns(self, cache, reps: Sequence[Task],
@@ -441,6 +533,8 @@ class VectorizedPolicy:
         vector per step; only S_R and feasibility touch (U, N)."""
         w = weights.as_array()
         names = cache.names
+        prof = self.profiler
+        t0 = perf_counter() if prof is not None else 0.0
         task_cpu = np.array([t.cpu for t in reps], dtype=float)
         task_mem = np.array([t.mem_mb for t in reps], dtype=float)
         feasible = cache.feasible(task_cpu, task_mem,
@@ -451,6 +545,9 @@ class VectorizedPolicy:
                 + w[2] * (1.0 / (1.0 + cache.avg_time_s))
                 + w[3] * (1.0 / (1.0 + cache.running * 2.0))
                 + w[4] * (1.0 / (1.0 + ints * cache.e_est)))     # (N,)
+        if prof is not None:
+            prof.add("featurize", perf_counter() - t0)
+            t0 = perf_counter()
         out: List[Optional[str]] = []
         chunk = max(1, self._CHUNK_ELEMS // max(cache.n, 1))
         for lo in range(0, len(reps), chunk):
@@ -467,8 +564,12 @@ class VectorizedPolicy:
             totals = np.where(feasible[lo:lo + chunk],
                               w[0] * s_r + base[None, :], -np.inf)
             best = np.argmax(totals, axis=1)
+            if self.capture_scores:
+                self._cap_block(totals, best)
             out.extend(names[b] if totals[i, b] > 0.0 else None
                        for i, b in enumerate(best))
+        if prof is not None:
+            prof.add("score", perf_counter() - t0)
         return out
 
     # Below this fleet size a single-task selection is cheaper through the

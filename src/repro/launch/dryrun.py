@@ -42,11 +42,17 @@ from repro.launch import hlo as hlo_mod  # noqa: E402
 from repro.launch import specs as specs_mod  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import modes, transformer  # noqa: E402
+from repro.obs import console_logger  # noqa: E402
 from repro.optim import adamw  # noqa: E402
 from repro.runtime import steps  # noqa: E402
 from repro.sharding import rules  # noqa: E402
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# Module-level logger (DESIGN.md §9): bare-message stream handler keeps the
+# console output identical to the raw print() it replaces (StreamHandler
+# flushes per record, preserving the old flush=True behaviour).
+log = console_logger(__name__)
 
 
 # ---------------------------------------------------------------------------
@@ -288,23 +294,24 @@ def main():
         mesh_name = "2x16x16" if args.multipod else "16x16"
         f = out_dir / f"{arch}__{shape}__{mesh_name}.json"
         if args.skip_existing and f.exists():
-            print(f"[skip] {arch} {shape} {mesh_name}")
+            log.info("[skip] %s %s %s", arch, shape, mesh_name)
             continue
         t0 = time.time()
         try:
             r = run_combo(arch, shape, args.multipod, args.skip_account, out_dir)
             dt = time.time() - t0
             rt = r.get("account", {}).get("roofline", {})
-            print(f"[ok]   {arch:18s} {shape:12s} {mesh_name}  {dt:7.1f}s "
-                  f"compile={r['full']['compile_s']}s "
-                  f"bottleneck={rt.get('bottleneck', '-')}", flush=True)
+            log.info("[ok]   %-18s %-12s %s  %7.1fs compile=%ss bottleneck=%s",
+                     arch, shape, mesh_name, dt, r["full"]["compile_s"],
+                     rt.get("bottleneck", "-"))
             ok += 1
         except Exception as e:  # noqa: BLE001
             dt = time.time() - t0
-            print(f"[FAIL] {arch} {shape} {mesh_name} after {dt:.1f}s: {e}", flush=True)
+            log.error("[FAIL] %s %s %s after %.1fs: %s",
+                      arch, shape, mesh_name, dt, e)
             traceback.print_exc()
             fail += 1
-    print(f"done: {ok} ok, {fail} failed")
+    log.info("done: %d ok, %d failed", ok, fail)
     return 0 if fail == 0 else 1
 
 

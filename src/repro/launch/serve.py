@@ -15,7 +15,13 @@ from repro.configs.registry import get_config, list_archs, reduced_config
 from repro.core import costmodel, energy
 from repro.core.router import GreenRouter, PodSpec
 from repro.models import transformer
+from repro.obs import console_logger
 from repro.runtime.serving import Request, ServingEngine
+
+# Module-level logger (DESIGN.md §9): bare-message stream handler keeps the
+# console output identical to the raw print() it replaces, while letting
+# embedders re-route or silence the launcher through standard logging.
+log = console_logger(__name__)
 
 DEFAULT_PODS = [
     PodSpec("pod-high", chips=256, region="coal-heavy", carbon_intensity=620.0),
@@ -63,14 +69,16 @@ def main(argv=None):
         engine.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.max_new))
     comps = engine.run_all()
     for c in comps[:4]:
-        print(f"req {c.uid}: pod={c.pod} latency={c.latency_s*1e3:.1f}ms "
-              f"carbon={c.carbon_g*1e6:.3f}ugCO2 tokens={c.tokens[:6]}...")
+        log.info("req %d: pod=%s latency=%.1fms carbon=%.3fugCO2 tokens=%s...",
+                 c.uid, c.pod, c.latency_s * 1e3, c.carbon_g * 1e6,
+                 c.tokens[:6])
     rep = engine.report()
-    print(f"\ncompleted={rep['completed']} total carbon "
-          f"{rep['carbon_g_total']*1e3:.4f} mgCO2")
+    log.info("\ncompleted=%d total carbon %.4f mgCO2",
+             rep["completed"], rep["carbon_g_total"] * 1e3)
     for region, acc in rep["per_region"].items():
-        print(f"  {region:12s} tasks={acc['tasks']:4d} "
-              f"carbon={acc['carbon_g']*1e3:.4f} mgCO2 I={acc['intensity']:.0f}")
+        log.info("  %-12s tasks=%4d carbon=%.4f mgCO2 I=%.0f",
+                 region, acc["tasks"], acc["carbon_g"] * 1e3,
+                 acc["intensity"])
     return rep
 
 

@@ -17,8 +17,13 @@ from repro.configs.registry import get_config, list_archs, reduced_config
 from repro.core.carbon import CarbonMonitor
 from repro.data.pipeline import DataConfig, make_batches
 from repro.models import transformer
+from repro.obs import console_logger
 from repro.optim import adamw
 from repro.runtime import steps
+
+# Module-level logger (DESIGN.md §9): bare-message stream handler keeps the
+# console output identical to the raw print() it replaces.
+log = console_logger(__name__)
 
 
 def main(argv=None):
@@ -37,8 +42,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full_config else reduced_config(args.arch)
-    print(f"arch={cfg.name} layers={cfg.num_layers} d_model={cfg.d_model} "
-          f"params~{cfg.param_count()/1e6:.1f}M")
+    log.info("arch=%s layers=%d d_model=%d params~%.1fM",
+             cfg.name, cfg.num_layers, cfg.d_model, cfg.param_count() / 1e6)
 
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
                                 warmup_steps=max(1, args.steps // 10))
@@ -62,17 +67,18 @@ def main(argv=None):
         # Bill the step: wall-clock x a CPU power estimate on this host.
         monitor.record_power_sample("train", dt, p_cpu_w=65.0, ram_gb=4.0)
         if step % args.log_every == 0 or step == 1:
-            print(f"step {step:4d}  loss {loss:.4f}  {dt*1e3:7.1f} ms  "
-                  f"lr {float(metrics['lr']):.2e}  gnorm {float(metrics['grad_norm']):.3f}")
+            log.info("step %4d  loss %.4f  %7.1f ms  lr %.2e  gnorm %.3f",
+                     step, loss, dt * 1e3, float(metrics["lr"]),
+                     float(metrics["grad_norm"]))
     total = time.perf_counter() - t_start
-    print(f"done {args.steps} steps in {total:.1f}s; "
-          f"carbon {monitor.total_carbon_g():.4f} gCO2 "
-          f"({monitor.total_energy_kwh()*1e3:.3f} Wh) at "
-          f"{args.carbon_intensity:.0f} gCO2/kWh")
+    log.info("done %d steps in %.1fs; carbon %.4f gCO2 (%.3f Wh) at "
+             "%.0f gCO2/kWh",
+             args.steps, total, monitor.total_carbon_g(),
+             monitor.total_energy_kwh() * 1e3, args.carbon_intensity)
     if args.checkpoint:
         store.save(args.checkpoint, params,
                    {"arch": cfg.name, "steps": args.steps})
-        print(f"checkpoint -> {args.checkpoint}")
+        log.info("checkpoint -> %s", args.checkpoint)
     return float(metrics["loss"])
 
 

@@ -1,0 +1,98 @@
+"""repro.obs — always-available observability (DESIGN.md §9).
+
+Three pillars, each independently switchable and ``None`` when off:
+
+- :class:`~repro.obs.trace.DecisionTrace` — column-oriented ring buffer
+  of per-task scheduling decisions (node/cut/mode, winning vs runner-up
+  score, intensity + conformal interval, admission verdict, carbon) with
+  a deterministic JSONL exporter.
+- :class:`~repro.obs.registry.MetricsRegistry` — numpy-column counters /
+  gauges / histograms with Prometheus-style text exposition.
+- :class:`~repro.obs.profiler.StepProfiler` — ``perf_counter`` spans
+  around the engine/sim phases, folded into per-phase histograms.
+
+``Observability`` bundles them for threading through
+``CarbonEdgeEngine(obs=...)`` and ``AsyncEngineDriver(obs=...)``. The
+disabled default costs one ``is not None`` check per instrumented site and
+leaves every existing output byte-identical (the sim ``to_text`` contract,
+enforced by ``gate_obs``); this package imports only stdlib + numpy so the
+core/tenancy/partition layers can depend on it without cycles.
+"""
+from __future__ import annotations
+
+import logging
+import sys
+from typing import Dict, Union
+
+from repro.obs.profiler import SPAN_EDGES_S, StepProfiler
+from repro.obs.registry import DEFAULT_EDGES, Family, MetricsRegistry
+from repro.obs.trace import (MODE_LABELS, VERDICT_DEFER, VERDICT_DONE,
+                             VERDICT_LABELS, VERDICT_REJECT, DecisionTrace)
+
+__all__ = [
+    "DEFAULT_EDGES", "DecisionTrace", "Family", "MetricsRegistry",
+    "MODE_LABELS", "Observability", "SPAN_EDGES_S", "StepProfiler",
+    "VERDICT_DEFER", "VERDICT_DONE", "VERDICT_LABELS", "VERDICT_REJECT",
+    "console_logger",
+]
+
+
+class Observability:
+    """Hub carrying the enabled pillars; a pillar is ``None`` when off.
+
+    Each argument accepts ``False`` (off), ``True`` (fresh default
+    instance), or an existing instance to share between components."""
+
+    def __init__(self, *,
+                 trace: Union[bool, DecisionTrace] = False,
+                 metrics: Union[bool, MetricsRegistry] = False,
+                 profile: Union[bool, StepProfiler] = False,
+                 trace_capacity: int = 1 << 16) -> None:
+        self.trace = (trace if isinstance(trace, DecisionTrace)
+                      else DecisionTrace(trace_capacity) if trace else None)
+        self.metrics = (metrics if isinstance(metrics, MetricsRegistry)
+                        else MetricsRegistry() if metrics else None)
+        self.profiler = (profile if isinstance(profile, StepProfiler)
+                         else StepProfiler() if profile else None)
+
+    @classmethod
+    def all(cls, trace_capacity: int = 1 << 16) -> "Observability":
+        """Every pillar on — the ``gate_obs`` enabled configuration."""
+        return cls(trace=True, metrics=True, profile=True,
+                   trace_capacity=trace_capacity)
+
+    @property
+    def enabled(self) -> bool:
+        return (self.trace is not None or self.metrics is not None
+                or self.profiler is not None)
+
+    def report(self) -> Dict:
+        """JSON-ready summary of whatever pillars are on."""
+        out: Dict = {}
+        if self.trace is not None:
+            out["trace"] = self.trace.stats()
+        if self.profiler is not None:
+            out["profiler"] = self.profiler.summary()
+        if self.metrics is not None:
+            out["metrics"] = self.metrics.snapshot()
+        return out
+
+
+def console_logger(name: str, level: int = logging.INFO) -> logging.Logger:
+    """Module-level logger with a plain-``%(message)s`` stdout handler on
+    the shared ``repro`` root, so launch scripts keep their exact printed
+    output under ``logging`` (SNIPPETS.md §1). Idempotent: the handler is
+    attached once no matter how many modules call this."""
+    logger = logging.getLogger(name)
+    # attach to the shared "repro" ancestor when possible so one handler
+    # serves the whole package; "__main__"-style names get their own
+    root = (logging.getLogger("repro")
+            if name == "repro" or name.startswith("repro.") else logger)
+    if not any(getattr(h, "_repro_console", False) for h in root.handlers):
+        handler = logging.StreamHandler(sys.stdout)
+        handler.setFormatter(logging.Formatter("%(message)s"))
+        handler._repro_console = True
+        root.addHandler(handler)
+        root.setLevel(level)
+    logger.setLevel(level)
+    return logger

@@ -1,0 +1,109 @@
+"""Per-phase step profiler (DESIGN.md §9).
+
+``perf_counter`` spans around the featurize/select/execute/bill phases of
+``engine.step`` (and the sim driver's event batches) are folded into fixed
+log-spaced histograms — count / total / min / max / per-bin counts per
+phase — so the paper's 0.03 ms scheduling-overhead claim is a continuously
+tracked artifact (``BENCH_obs.json``) instead of an ad-hoc benchmark.
+
+The accumulator is O(1) per span (a dict lookup, four scalar updates, and
+one ``searchsorted`` into the shared edge vector); instrumented call sites
+guard every ``perf_counter`` pair behind a single ``is not None`` check so
+the disabled path pays one pointer comparison per phase.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from time import perf_counter
+from typing import Dict
+
+import numpy as np
+
+# Span-duration histogram edges (seconds): half-decade steps from 100 ns
+# to 10 s, plus an implicit overflow bin. Fixed edges keep summaries
+# comparable across phases, runs, and CI artifacts.
+SPAN_EDGES_S = 10.0 ** np.arange(-7.0, 1.5, 0.5)
+
+
+class _Phase:
+    __slots__ = ("count", "total_s", "min_s", "max_s", "bins")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.total_s = 0.0
+        self.min_s = float("inf")
+        self.max_s = 0.0
+        self.bins = np.zeros(SPAN_EDGES_S.size + 1, dtype=np.int64)
+
+
+class StepProfiler:
+    """Accumulate named wall-clock spans into per-phase histograms."""
+
+    def __init__(self) -> None:
+        self._phases: Dict[str, _Phase] = {}
+
+    def add(self, phase: str, dt_s: float) -> None:
+        """Fold one span of ``dt_s`` seconds into ``phase``."""
+        p = self._phases.get(phase)
+        if p is None:
+            p = self._phases[phase] = _Phase()
+        p.count += 1
+        p.total_s += dt_s
+        if dt_s < p.min_s:
+            p.min_s = dt_s
+        if dt_s > p.max_s:
+            p.max_s = dt_s
+        p.bins[int(np.searchsorted(SPAN_EDGES_S, dt_s, side="right"))] += 1
+
+    @contextmanager
+    def span(self, phase: str):
+        """Context-manager form of :meth:`add` for coarse, cold spans."""
+        t0 = perf_counter()
+        try:
+            yield
+        finally:
+            self.add(phase, perf_counter() - t0)
+
+    def count(self, phase: str) -> int:
+        p = self._phases.get(phase)
+        return 0 if p is None else p.count
+
+    def total_s(self, phase: str) -> float:
+        p = self._phases.get(phase)
+        return 0.0 if p is None else p.total_s
+
+    def phases(self):
+        return sorted(self._phases)
+
+    def percentile_s(self, phase: str, q: float) -> float:
+        """Histogram-resolution upper bound on the ``q`` quantile (q in
+        [0, 1]): the upper edge of the bin where the cumulative count
+        crosses ``q * count`` (the observed max for the overflow bin)."""
+        p = self._phases.get(phase)
+        if p is None or p.count == 0:
+            return float("nan")
+        cum = np.cumsum(p.bins)
+        i = int(np.searchsorted(cum, q * p.count, side="left"))
+        if i >= SPAN_EDGES_S.size:
+            return p.max_s
+        return float(SPAN_EDGES_S[i])
+
+    def summary(self) -> Dict:
+        """JSON-ready per-phase aggregates plus the shared bin edges."""
+        phases = {}
+        for name in sorted(self._phases):
+            p = self._phases[name]
+            phases[name] = {
+                "count": p.count,
+                "total_s": p.total_s,
+                "mean_s": p.total_s / p.count if p.count else 0.0,
+                "min_s": p.min_s if p.count else 0.0,
+                "max_s": p.max_s,
+                "p50_s": self.percentile_s(name, 0.50),
+                "p95_s": self.percentile_s(name, 0.95),
+                "hist": p.bins.tolist(),
+            }
+        return {"edges_s": SPAN_EDGES_S.tolist(), "phases": phases}
+
+    def reset(self) -> None:
+        self._phases.clear()

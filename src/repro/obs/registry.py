@@ -1,0 +1,208 @@
+"""Vectorized metrics registry (DESIGN.md §9).
+
+Counters, gauges, and histograms stored as numpy columns: each family
+interns its label tuples to row indices once, and hot-path updates are
+array scatters (``inc_at`` folds grouped increments through
+``energy.ledger_scatter_add``, the unbuffered ``np.add.at`` counterpart of
+the billing ledger fold — deterministic, loop-equivalent accumulation).
+``to_text`` renders a Prometheus-style text exposition (``# HELP`` /
+``# TYPE`` / cumulative ``_bucket`` rows) with the same ``%.9g`` float
+rendering the sim's byte-identity contract uses.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.energy import ledger_scatter_add
+
+# Default histogram edges (seconds-ish scale); families may override.
+DEFAULT_EDGES = 10.0 ** np.arange(-6.0, 2.0, 1.0)
+
+_KINDS = ("counter", "gauge", "histogram")
+
+
+class Family:
+    """One named metric family: a label-tuple -> row index intern table
+    plus numpy value columns that grow by doubling."""
+
+    def __init__(self, kind: str, name: str, help: str = "",
+                 label_names: Sequence[str] = (), edges=None) -> None:
+        if kind not in _KINDS:
+            raise ValueError(f"unknown metric kind {kind!r}")
+        self.kind = kind
+        self.name = name
+        self.help = help
+        self.label_names = tuple(label_names)
+        self._index: Dict[Tuple[str, ...], int] = {}
+        self._labels: List[Tuple[str, ...]] = []
+        if kind == "histogram":
+            self.edges = np.asarray(DEFAULT_EDGES if edges is None else edges,
+                                    dtype=float)
+            self._bins = np.zeros((0, self.edges.size + 1), dtype=np.int64)
+            self._sum = np.zeros(0, dtype=float)
+        self.values = np.zeros(0, dtype=float)
+
+    def __len__(self) -> int:
+        return len(self._labels)
+
+    def _grow(self, n: int) -> None:
+        have = self.values.size
+        if n <= have:
+            return
+        new = max(n, 2 * have, 8)
+        self.values = np.concatenate(
+            [self.values, np.zeros(new - have, dtype=float)])
+        if self.kind == "histogram":
+            self._bins = np.concatenate(
+                [self._bins,
+                 np.zeros((new - have, self.edges.size + 1), dtype=np.int64)])
+            self._sum = np.concatenate(
+                [self._sum, np.zeros(new - have, dtype=float)])
+
+    def row(self, labels: Tuple[str, ...] = ()) -> int:
+        """Intern one label tuple; returns its stable row index."""
+        labels = tuple(labels)
+        if len(labels) != len(self.label_names):
+            raise ValueError(
+                f"{self.name}: expected labels {self.label_names}, "
+                f"got {labels!r}")
+        i = self._index.get(labels)
+        if i is None:
+            i = self._index[labels] = len(self._labels)
+            self._labels.append(labels)
+            self._grow(i + 1)
+        return i
+
+    def rows(self, labels_list) -> np.ndarray:
+        """Intern many label tuples at once (O(len) dict work; pass the
+        *distinct* labels of a batch, not per-task duplicates)."""
+        return np.fromiter((self.row(l) for l in labels_list),
+                           dtype=np.int64, count=len(labels_list))
+
+    # -- counter / gauge -------------------------------------------------
+    # NOTE: intern (which may reallocate the columns) BEFORE touching
+    # self.values — `self.values[self.row(...)]` would bind the pre-grow
+    # array first.
+    def inc(self, value: float = 1.0, labels: Tuple[str, ...] = ()) -> None:
+        i = self.row(labels)
+        self.values[i] += value
+
+    def inc_at(self, rows: np.ndarray, values) -> None:
+        """Grouped scatter increment: ``values[k]`` into row ``rows[k]``,
+        folded unbuffered so repeated rows accumulate deterministically."""
+        ledger_scatter_add(self.values, rows, values)
+
+    def set(self, value: float, labels: Tuple[str, ...] = ()) -> None:
+        i = self.row(labels)
+        self.values[i] = value
+
+    def set_at(self, rows: np.ndarray, values) -> None:
+        self.values[np.asarray(rows)] = values
+
+    def get(self, labels: Tuple[str, ...] = ()) -> float:
+        i = self._index.get(tuple(labels))
+        return 0.0 if i is None else float(self.values[i])
+
+    # -- histogram -------------------------------------------------------
+    def observe(self, values, labels: Tuple[str, ...] = ()) -> None:
+        """Fold a batch of observations into one labeled series."""
+        if self.kind != "histogram":
+            raise ValueError(f"{self.name} is a {self.kind}, not histogram")
+        v = np.atleast_1d(np.asarray(values, dtype=float))
+        if v.size == 0:
+            return
+        i = self.row(labels)
+        which = np.searchsorted(self.edges, v, side="right")
+        self._bins[i] += np.bincount(which, minlength=self.edges.size + 1)
+        self._sum[i] += float(v.sum())
+        self.values[i] += v.size          # observation count
+
+    # -- rendering -------------------------------------------------------
+    @staticmethod
+    def _label_str(names, labels) -> str:
+        if not names:
+            return ""
+        inner = ",".join(f'{k}="{v}"' for k, v in zip(names, labels))
+        return "{" + inner + "}"
+
+    def render(self) -> List[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} {self.kind}"]
+        order = sorted(range(len(self._labels)),
+                       key=lambda i: self._labels[i])
+        for i in order:
+            lab = self._labels[i]
+            if self.kind == "histogram":
+                cum = np.cumsum(self._bins[i])
+                for j, edge in enumerate(self.edges):
+                    le = self._label_str(self.label_names + ("le",),
+                                         lab + (f"{edge:.9g}",))
+                    lines.append(f"{self.name}_bucket{le} {cum[j]}")
+                le = self._label_str(self.label_names + ("le",),
+                                     lab + ("+Inf",))
+                lines.append(f"{self.name}_bucket{le} {cum[-1]}")
+                ls = self._label_str(self.label_names, lab)
+                lines.append(f"{self.name}_sum{ls} {self._sum[i]:.9g}")
+                lines.append(f"{self.name}_count{ls} {int(self.values[i])}")
+            else:
+                ls = self._label_str(self.label_names, lab)
+                lines.append(f"{self.name}{ls} {self.values[i]:.9g}")
+        return lines
+
+    def snapshot(self) -> Dict[str, float]:
+        """{rendered-label-string: value} for report(deep=True)."""
+        out = {}
+        for lab in sorted(self._labels):
+            key = self._label_str(self.label_names, lab) or "_"
+            out[key] = float(self.values[self._index[lab]])
+        return out
+
+
+class MetricsRegistry:
+    """Named families with get-or-create accessors and text exposition."""
+
+    def __init__(self) -> None:
+        self._families: Dict[str, Family] = {}
+
+    def _family(self, kind: str, name: str, help: str,
+                labels: Sequence[str], edges=None) -> Family:
+        fam = self._families.get(name)
+        if fam is None:
+            fam = self._families[name] = Family(kind, name, help,
+                                               labels, edges)
+        elif fam.kind != kind or fam.label_names != tuple(labels):
+            raise ValueError(
+                f"metric {name!r} re-registered as {kind}{tuple(labels)}, "
+                f"was {fam.kind}{fam.label_names}")
+        return fam
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = ()) -> Family:
+        return self._family("counter", name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Sequence[str] = ()) -> Family:
+        return self._family("gauge", name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Sequence[str] = (), edges=None) -> Family:
+        return self._family("histogram", name, help, labels, edges)
+
+    def get(self, name: str):
+        return self._families.get(name)
+
+    def families(self) -> List[str]:
+        return sorted(self._families)
+
+    def to_text(self) -> str:
+        """Prometheus-style exposition, families and series sorted."""
+        lines: List[str] = []
+        for name in sorted(self._families):
+            lines.extend(self._families[name].render())
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def snapshot(self) -> Dict[str, Dict]:
+        return {name: {"kind": fam.kind, "values": fam.snapshot()}
+                for name, fam in sorted(self._families.items())}

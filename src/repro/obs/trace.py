@@ -1,0 +1,288 @@
+"""Column-oriented decision trace (DESIGN.md §9).
+
+``DecisionTrace`` is a fixed-capacity ring buffer of numpy columns — one
+row per drained task — recording what the scheduler decided and why: the
+chosen (node, cut, mode), the winning and runner-up totals, the execution
+intensity (with its conformal interval when the provider carries a
+calibrator), the billed intensity and carbon, the admission verdict, and
+the tenant. The engine populates whole steps at a time from arrays it
+already computed for batched execute+billing, so recording costs
+O(distinct nodes) Python and a handful of vectorized column writes — no
+per-task loops on the hot path.
+
+Node and tenant names are interned to integer ids (over *distinct* values
+only); the JSONL exporter resolves them back and emits rows oldest-first
+with sorted keys and NaN/Inf mapped to null, so a fixed-seed run exports a
+byte-identical trace.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+# Admission verdict encoding for the ``verdict`` column. NOTE: this is the
+# trace's own encoding (done first, because untenanted steps are all-done);
+# repro.tenancy.policy orders its action constants ADMIT/DEFER/REJECT —
+# the engine maps explicitly, never by passing action codes through.
+VERDICT_DONE, VERDICT_REJECT, VERDICT_DEFER = 0, 1, 2
+VERDICT_LABELS = ("done", "reject", "defer")
+
+# Mode encoding for the ``mode`` column; must match
+# ``repro.tenancy.spec.MODE_ORDER`` (kept duplicated so repro.obs imports
+# only stdlib+numpy; consistency is asserted in tests/test_obs.py).
+MODE_LABELS = ("performance", "balanced", "green")
+
+
+class DecisionTrace:
+    """Ring buffer of per-task scheduling decisions, as numpy columns."""
+
+    def __init__(self, capacity: int = 1 << 16) -> None:
+        cap = int(capacity)
+        if cap <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = cap
+        self.count = 0            # rows ever recorded (ring keeps last cap)
+        self._name_ids: Dict[str, Dict[str, int]] = {"node": {},
+                                                     "tenant": {}}
+        self._names: Dict[str, List[str]] = {"node": [], "tenant": []}
+        self.step = np.zeros(cap, dtype=np.int64)
+        self.pos = np.zeros(cap, dtype=np.int32)
+        self.hour = np.zeros(cap, dtype=np.float64)
+        self.verdict = np.zeros(cap, dtype=np.int8)
+        self.node = np.full(cap, -1, dtype=np.int32)
+        self.cut = np.full(cap, -1, dtype=np.int32)
+        self.mode = np.full(cap, -1, dtype=np.int8)
+        self.tenant = np.full(cap, -1, dtype=np.int32)
+        self.score = np.full(cap, np.nan)
+        self.runner_up = np.full(cap, np.nan)
+        self.intensity = np.full(cap, np.nan)
+        self.interval_lo = np.full(cap, np.nan)
+        self.interval_hi = np.full(cap, np.nan)
+        self.intensity_billed = np.full(cap, np.nan)
+        self.carbon_g = np.full(cap, np.nan)
+        self.expected_g = np.full(cap, np.nan)
+
+    # ------------------------------------------------------------------
+    # recording
+    # ------------------------------------------------------------------
+    def intern_names(self, names, kind: str = "node") -> np.ndarray:
+        """Map a sequence of names to stable integer ids (per ``kind``
+        namespace). O(distinct) dict work: pass the *unique* node array
+        the engine already holds and fan out with its inverse index."""
+        arr = np.asarray(names, dtype=object)
+        table = self._name_ids[kind]
+        out_names = self._names[kind]
+        if arr.size == 0:
+            return np.zeros(0, dtype=np.int32)
+        uniq, inv = np.unique(arr, return_inverse=True)
+        ids = np.empty(uniq.size, dtype=np.int32)
+        for k, name in enumerate(uniq):
+            i = table.get(name)
+            if i is None:
+                i = table[name] = len(out_names)
+                out_names.append(str(name))
+            ids[k] = i
+        return ids[inv]
+
+    def names(self, kind: str = "node") -> List[str]:
+        return list(self._names[kind])
+
+    def record_batch(self, *, step, hour, verdict,
+                     pos=None, node=None, cut=None, mode=None, tenant=None,
+                     score=None, runner_up=None,
+                     intensity=None, interval_lo=None, interval_hi=None,
+                     intensity_billed=None, carbon_g=None,
+                     expected_g=None) -> None:
+        """Append one engine step's rows. ``verdict`` fixes the row count;
+        every other column accepts an array of that length, a scalar to
+        broadcast, or ``None`` for the column's "absent" fill (so ring
+        slots being overwritten never leak stale values). ``node`` and
+        ``tenant`` take *interned ids* (see :meth:`intern_names`)."""
+        v = np.asarray(verdict, dtype=np.int8)
+        m = int(v.size)
+        if m == 0:
+            return
+        if m > self.capacity:       # keep only the rows that would survive
+            drop = m - self.capacity
+
+            def _clip(x):
+                return x[drop:] if (x is not None
+                                    and np.ndim(x) == 1) else x
+
+            self.count += drop      # dropped rows still count as recorded
+            return self.record_batch(
+                step=step, hour=hour, verdict=v[drop:],
+                pos=(_clip(pos) if pos is not None
+                     else np.arange(drop, m)),
+                node=_clip(node), cut=_clip(cut), mode=_clip(mode),
+                tenant=_clip(tenant), score=_clip(score),
+                runner_up=_clip(runner_up), intensity=_clip(intensity),
+                interval_lo=_clip(interval_lo),
+                interval_hi=_clip(interval_hi),
+                intensity_billed=_clip(intensity_billed),
+                carbon_g=_clip(carbon_g), expected_g=_clip(expected_g))
+        start = self.count % self.capacity
+        if start + m <= self.capacity:            # contiguous fast path
+            idx = slice(start, start + m)
+        else:
+            idx = (start + np.arange(m)) % self.capacity
+        self.step[idx] = step
+        self.hour[idx] = hour
+        self.verdict[idx] = v
+        self.pos[idx] = np.arange(m) if pos is None else pos
+        cols = ((self.node, node, -1), (self.cut, cut, -1),
+                (self.mode, mode, -1), (self.tenant, tenant, -1),
+                (self.score, score, np.nan),
+                (self.runner_up, runner_up, np.nan),
+                (self.intensity, intensity, np.nan),
+                (self.interval_lo, interval_lo, np.nan),
+                (self.interval_hi, interval_hi, np.nan),
+                (self.intensity_billed, intensity_billed, np.nan),
+                (self.carbon_g, carbon_g, np.nan),
+                (self.expected_g, expected_g, np.nan))
+        for col, val, absent in cols:
+            col[idx] = absent if val is None else val
+        self.count += m
+
+    # ------------------------------------------------------------------
+    # reading
+    # ------------------------------------------------------------------
+    def _order(self) -> np.ndarray:
+        """Indices of retained rows, oldest first."""
+        n = min(self.count, self.capacity)
+        if self.count <= self.capacity:
+            return np.arange(n)
+        head = self.count % self.capacity
+        return np.concatenate([np.arange(head, self.capacity),
+                               np.arange(head)])
+
+    def __len__(self) -> int:
+        return min(self.count, self.capacity)
+
+    def row(self, i: int) -> Dict:
+        """The ``i``-th retained row (0 = oldest), names resolved."""
+        j = int(self._order()[i])
+
+        def f(x) -> Optional[float]:
+            x = float(x)
+            return x if math.isfinite(x) else None
+
+        node_names, tenant_names = self._names["node"], self._names["tenant"]
+        nd, tn = int(self.node[j]), int(self.tenant[j])
+        cut = int(self.cut[j])
+        md = int(self.mode[j])
+        return {
+            "step": int(self.step[j]),
+            "task": int(self.pos[j]),
+            "hour": float(self.hour[j]),
+            "verdict": VERDICT_LABELS[int(self.verdict[j])],
+            "node": node_names[nd] if nd >= 0 else None,
+            "cut": cut if cut >= 0 else None,
+            "mode": MODE_LABELS[md] if 0 <= md < len(MODE_LABELS) else None,
+            "tenant": tenant_names[tn] if tn >= 0 else None,
+            "score": f(self.score[j]),
+            "runner_up": f(self.runner_up[j]),
+            "intensity": f(self.intensity[j]),
+            "interval_lo": f(self.interval_lo[j]),
+            "interval_hi": f(self.interval_hi[j]),
+            "intensity_billed": f(self.intensity_billed[j]),
+            "carbon_g": f(self.carbon_g[j]),
+            "expected_g": f(self.expected_g[j]),
+        }
+
+    def rows(self) -> Iterator[Dict]:
+        for i in range(len(self)):
+            yield self.row(i)
+
+    def to_jsonl(self) -> str:
+        """Deterministic JSONL: oldest-first, sorted keys, NaN/Inf -> null
+        (``json`` would otherwise emit non-standard ``NaN`` literals)."""
+        lines = [json.dumps(r, sort_keys=True) for r in self.rows()]
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def export_jsonl(self, path: str) -> int:
+        """Write :meth:`to_jsonl` to ``path``; returns the row count."""
+        text = self.to_jsonl()
+        with open(path, "w") as fh:
+            fh.write(text)
+        return len(self)
+
+    # ------------------------------------------------------------------
+    # aggregates
+    # ------------------------------------------------------------------
+    def explain(self, step: int, task: int) -> Optional[str]:
+        """One-line "why": the decision row for (step, task), rendered."""
+        order = self._order()
+        hit = np.nonzero((self.step[order] == step)
+                         & (self.pos[order] == task))[0]
+        if hit.size == 0:
+            return None
+        r = self.row(int(hit[-1]))
+        parts = [f"step {r['step']} task {r['task']}: {r['verdict']}"]
+        if r["node"] is not None:
+            where = f"on {r['node']!r}"
+            if r["cut"] is not None:
+                where += f" at cut {r['cut']}"
+            if r["mode"] is not None:
+                where += f" ({r['mode']} mode)"
+            parts.append(where)
+        if r["score"] is not None:
+            s = f"score {r['score']:.6g}"
+            if r["runner_up"] is not None and math.isfinite(r["runner_up"]):
+                s += (f" vs runner-up {r['runner_up']:.6g}"
+                      f" (margin {r['score'] - r['runner_up']:.6g})")
+            parts.append(s)
+        if r["intensity"] is not None:
+            s = f"intensity {r['intensity']:.6g} gCO2/kWh"
+            if r["interval_lo"] is not None and r["interval_hi"] is not None:
+                s += f" in [{r['interval_lo']:.6g}, {r['interval_hi']:.6g}]"
+            parts.append(s)
+        if r["carbon_g"] is not None:
+            parts.append(f"billed {r['carbon_g']:.6g} gCO2")
+        return "; ".join(parts)
+
+    def verdict_counts(self) -> Dict[str, int]:
+        order = self._order()
+        counts = np.bincount(self.verdict[order],
+                             minlength=len(VERDICT_LABELS))
+        return {lbl: int(counts[i]) for i, lbl in enumerate(VERDICT_LABELS)}
+
+    def cut_histogram(self) -> Dict[int, int]:
+        """Retained-row counts per partition cut index (placed rows with a
+        cut only); empty when no partition policy ran."""
+        order = self._order()
+        cuts = self.cut[order]
+        cuts = cuts[cuts >= 0]
+        if cuts.size == 0:
+            return {}
+        uniq, counts = np.unique(cuts, return_counts=True)
+        return {int(u): int(c) for u, c in zip(uniq, counts)}
+
+    def conformal_coverage(self) -> Dict:
+        """Empirical coverage of the recorded conformal intervals against
+        the intensity each row was actually billed at (falling back to
+        the execution intensity) — only rows with a non-degenerate
+        interval count."""
+        order = self._order()
+        lo = self.interval_lo[order]
+        hi = self.interval_hi[order]
+        billed = self.intensity_billed[order]
+        x = np.where(np.isfinite(billed), billed, self.intensity[order])
+        m = (np.isfinite(lo) & np.isfinite(hi) & (hi > lo) & np.isfinite(x))
+        if not m.any():
+            return {"rows": 0, "coverage": None, "mean_width": None}
+        inside = (x[m] >= lo[m]) & (x[m] <= hi[m])
+        return {"rows": int(m.sum()),
+                "coverage": float(inside.mean()),
+                "mean_width": float((hi[m] - lo[m]).mean())}
+
+    def stats(self) -> Dict:
+        return {"recorded": self.count,
+                "retained": len(self),
+                "capacity": self.capacity,
+                "verdicts": self.verdict_counts(),
+                "nodes": len(self._names["node"]),
+                "tenants": len(self._names["tenant"])}

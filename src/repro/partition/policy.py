@@ -24,6 +24,7 @@ the oracle for multi-segment splits of a *fixed* node list.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from time import perf_counter
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -162,6 +163,12 @@ class PartitionPolicy:
         self._block_key = (profile, link_mbps)
         self.last_decisions: List[Optional[JointDecision]] = []
         self._last_eff: Optional[np.ndarray] = None
+        # Observability hooks (DESIGN.md §9), mirroring VectorizedPolicy:
+        # `capture_scores` publishes {"score", "runner_up", "cut"} per
+        # task on `last_scores`; `profiler` gets featurize/score spans.
+        self.profiler = None
+        self.capture_scores = False
+        self.last_scores = None
 
     def _resolved_backend(self) -> str:
         if self.backend != "auto":
@@ -192,26 +199,50 @@ class PartitionPolicy:
                 reps.append(t)
         chosen = self._decide_unique(cluster, reps, weights, provider,
                                      now_hour)
-        return [chosen[uniq[key]] for key in keys]
+        if not self.capture_scores:
+            return [chosen[uniq[key]] for key in keys]
+        # expand the rep-level runner-up capture with the same index map
+        # (C-speed fromiter over map + one object-array gather)
+        idx = np.fromiter(map(uniq.__getitem__, keys), np.intp,
+                          count=len(keys))
+        run = getattr(self, "_cap_run_reps", None)
+        self._cap_run_tasks = (
+            np.asarray(run)[idx]
+            if run is not None and len(run) == len(reps)
+            else np.full(len(keys), np.nan))
+        return np.asarray(chosen, dtype=object)[idx].tolist()
 
     def _decide_unique(self, cluster, reps, weights, provider, now_hour):
+        cap = self.capture_scores
+        if cap:
+            self._cap_run: List[np.ndarray] = []
         cache = get_cache(cluster) if self.use_cache else None
         if cache is None:
             # Cluster-likes without FeatureCache plumbing: the oracle IS
             # the decision procedure (P x N scalar scan per unique task).
-            return [select_joint_scalar(cluster, t, self.profile, weights,
-                                        provider, now_hour,
-                                        self.latency_threshold_ms,
-                                        self.link_mbps) for t in reps]
+            out = [select_joint_scalar(cluster, t, self.profile, weights,
+                                       provider, now_hour,
+                                       self.latency_threshold_ms,
+                                       self.link_mbps) for t in reps]
+            if cap:
+                # oracle keeps only the winner; runner-up unavailable
+                self._cap_run_reps = np.full(len(out), np.nan)
+            return out
         if not self.use_select_memo:
-            return self._decide_cached(cache, reps, weights, provider,
-                                       now_hour)
+            out = self._decide_cached(cache, reps, weights, provider,
+                                      now_hour)
+            if cap:
+                self._cap_run_reps = (np.concatenate(self._cap_run)
+                                      if self._cap_run else np.zeros(0))
+            return out
         memo = getattr(cache, "_sel_memo", None)
         if memo is None:
             memo = cache._sel_memo = _SelectionMemo()
         memo.sync_epoch(cache, provider, now_hour)
+        # `cap` keys the table: capture-on entries are (decision,
+        # runner_up) pairs, plain entries bare decisions
         cfg = ("partition", self._block_key, self._resolved_backend(),
-               self.latency_threshold_ms, weights.as_array().tobytes())
+               self.latency_threshold_ms, weights.as_array().tobytes(), cap)
         table = memo.map.setdefault(cfg, {})
         keys = [(t.cpu, t.mem_mb) for t in reps]
         missing = [i for i, k in enumerate(keys) if k not in table]
@@ -221,11 +252,23 @@ class PartitionPolicy:
             if (len(table) + len(missing)
                     > VectorizedPolicy.MEMO_MAX_PROFILES):
                 table.clear()
-            for i, ch in zip(missing, chosen):
-                table[keys[i]] = ch
-        return [table[k] for k in keys]
+            if cap:
+                mr = (np.concatenate(self._cap_run) if self._cap_run
+                      else np.zeros(0))
+                for j, (i, ch) in enumerate(zip(missing, chosen)):
+                    table[keys[i]] = (ch, float(mr[j]))
+            else:
+                for i, ch in zip(missing, chosen):
+                    table[keys[i]] = ch
+        if not cap:
+            return [table[k] for k in keys]
+        entries = [table[k] for k in keys]
+        self._cap_run_reps = np.array([e[1] for e in entries])
+        return [e[0] for e in entries]
 
     def _decide_cached(self, cache, reps, weights, provider, now_hour):
+        prof = self.profiler
+        t0 = perf_counter() if prof is not None else 0.0
         t_pn, e_pn = cache.partition_block(self._block_key, self._rf,
                                            self._cs)           # (P, N)
         task_cpu = np.array([t.cpu for t in reps], dtype=float)
@@ -234,11 +277,18 @@ class PartitionPolicy:
                               self.latency_threshold_ms)       # (U, N)
         ints = cache.intensities(provider, now_hour,
                                  need=feas.any(axis=0))        # (N,)
+        if prof is not None:
+            prof.add("featurize", perf_counter() - t0)
+            t0 = perf_counter()
         if self._resolved_backend() == "pallas":
-            return self._decide_pallas(cache, task_cpu, task_mem, feas,
-                                       ints, t_pn, e_pn, weights)
-        return self._decide_numpy(cache, task_cpu, task_mem, feas, ints,
-                                  t_pn, e_pn, weights)
+            out = self._decide_pallas(cache, task_cpu, task_mem, feas,
+                                      ints, t_pn, e_pn, weights)
+        else:
+            out = self._decide_numpy(cache, task_cpu, task_mem, feas, ints,
+                                     t_pn, e_pn, weights)
+        if prof is not None:
+            prof.add("score", perf_counter() - t0)
+        return out
 
     @staticmethod
     def _resource_fracs(cache, task_cpu, task_mem):
@@ -264,6 +314,8 @@ class PartitionPolicy:
         cpu_frac, mem_frac = self._resource_fracs(cache, task_cpu, task_mem)
         s_r = 0.5 * np.minimum(1.0, cpu_frac) + 0.5 * np.minimum(1.0, mem_frac)
         N = cache.n
+        cap = self.capture_scores
+        runs: List[float] = []
         out: List[Optional[JointDecision]] = []
         for u in range(task_cpu.size):
             totals = np.where(feas[u][None, :],
@@ -271,10 +323,17 @@ class PartitionPolicy:
             flat = int(np.argmax(totals))
             p, n = divmod(flat, N)
             val = totals[p, n]
+            if cap:
+                # runner-up over the flattened (P, N) plane, winner masked
+                t2 = totals.ravel().copy()
+                t2[flat] = -np.inf
+                runs.append(float(t2.max()) if t2.size > 1 else -np.inf)
             out.append(JointDecision(cache.names[n], self.profile.cuts[p],
                                      p, float(val), float(self._rf[p]),
                                      float(self._cs[p]))
                        if val > 0.0 else None)
+        if cap:
+            self._cap_run.append(np.asarray(runs))
         return out
 
     def _decide_pallas(self, cache, task_cpu, task_mem, feas, ints, t_pn,
@@ -311,6 +370,9 @@ class PartitionPolicy:
         pidx = np.asarray(pidx)[:U]
         nidx = np.asarray(nidx)[:U]
         val = np.asarray(val, np.float64)[:U]
+        if self.capture_scores:
+            # fused winner-only fold: runner-up not materialized
+            self._cap_run.append(np.full(U, np.nan))
         return [JointDecision(cache.names[n], self.profile.cuts[p], int(p),
                               float(v), float(self._rf[p]),
                               float(self._cs[p]))
@@ -328,6 +390,14 @@ class PartitionPolicy:
                         if d is not None else t.base_latency_ms
                         for t, d in zip(tasks, decisions)])
         self._last_eff = eff
+        if self.capture_scores:
+            self.last_scores = {
+                "score": np.array([d.score if d is not None else np.nan
+                                   for d in decisions]),
+                "runner_up": self._cap_run_tasks,
+                "cut": np.array([d.cut_index if d is not None else -1
+                                 for d in decisions], dtype=np.int32),
+            }
         return [d.node if d is not None else None for d in decisions]
 
     def select(self, cluster, task: Task, weights: Weights, provider=None,

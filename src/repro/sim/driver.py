@@ -38,7 +38,9 @@ wall-clock service, so its runs repeat only up to host timing noise.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Protocol, Sequence, runtime_checkable
+from time import perf_counter
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
+                    runtime_checkable)
 
 from repro.sim.arrivals import ArrivalProcess, ClosedLoopClientPool
 from repro.sim.clock import VirtualClock, hours_to_s, ms_to_hours, s_to_hours
@@ -85,7 +87,8 @@ class AsyncEngineDriver:
                  slo_latency_s: Optional[float] = None,
                  tick_hours: float = 0.0,
                  clients: Optional[ClosedLoopClientPool] = None,
-                 risk_coverage: Optional[float] = None):
+                 risk_coverage: Optional[float] = None,
+                 obs=None):
         if arrivals is None and clients is None:
             raise ValueError("need an arrival process, a closed-loop "
                              "client pool, or both")
@@ -114,6 +117,13 @@ class AsyncEngineDriver:
         # factory signature (ARRIVAL events pass tenant=""). New requests
         # stop at the horizon; in-flight ones drain.
         self.clients = clients
+        # Observability (DESIGN.md §9): spans around the step/record/plan
+        # phases of each event batch plus per-EventKind counters. Off
+        # (None / disabled) leaves the event loop byte-identical — every
+        # hook sits behind a single `is not None` check. Pass the same
+        # Observability to the engine and the driver to get one unified
+        # profiler/registry across both layers.
+        self.obs = obs if obs is not None and obs.enabled else None
         self.clock = VirtualClock(start_hour)
         self.heap = EventHeap()
         self.metrics = MetricsCollector(slo_latency_s=slo_latency_s)
@@ -132,14 +142,20 @@ class AsyncEngineDriver:
         cluster = getattr(self.executor, "cluster", None)
         if cluster is None:
             return now
+        prof = self.obs.profiler if self.obs is not None else None
+        t0 = perf_counter() if prof is not None else 0.0
         if self.risk_coverage is not None:
             from repro.core.temporal import plan_wake_risk
-            return plan_wake_risk(self.forecast, cluster, task, now,
+            wake = plan_wake_risk(self.forecast, cluster, task, now,
                                   slot_hours=self.slot_hours,
                                   coverage=self.risk_coverage)
-        from repro.core.temporal import plan_wake
-        return plan_wake(self.forecast, cluster, task, now,
-                         slot_hours=self.slot_hours)
+        else:
+            from repro.core.temporal import plan_wake
+            wake = plan_wake(self.forecast, cluster, task, now,
+                             slot_hours=self.slot_hours)
+        if prof is not None:
+            prof.add("sim_plan", perf_counter() - t0)
+        return wake
 
     # -- event handlers ------------------------------------------------------
     def _enqueue(self, uid: int, task, submit_hour: float,
@@ -330,11 +346,18 @@ class AsyncEngineDriver:
         n = min(len(self._pending), self.max_batch)
         monitor = self._monitor()
         e0 = monitor.total_energy_kwh() if monitor is not None else None
+        prof = self.obs.profiler if self.obs is not None else None
+        t0 = perf_counter() if prof is not None else 0.0
         results = self.executor.step(now_hour=now, limit=n)
+        if prof is not None:
+            prof.add("sim_step", perf_counter() - t0)
         e_batch = (monitor.total_energy_kwh() - e0
                    if monitor is not None else None)
         outcomes = getattr(self.executor, "last_outcomes", None)
+        t0 = perf_counter() if prof is not None else 0.0
         self._busy_until = self._record_batch(results, now, e_batch, outcomes)
+        if prof is not None:
+            prof.add("sim_record", perf_counter() - t0)
         if self._pending:
             self._schedule_flush(max(self._busy_until,
                                      now + self.batch_window_hours))
@@ -403,9 +426,18 @@ class AsyncEngineDriver:
             for k in range(1, n_ticks + 1):
                 self.heap.push(self.start_hour + k * self.tick_hours,
                                EventKind.INTENSITY_TICK)
+        # Per-EventKind counters (obs metrics only): a plain dict on the
+        # loop, folded into one `sim_events_total` family after the drain
+        # so the hot loop never touches the registry.
+        ev_counts: Optional[Dict[str, int]] = (
+            {} if self.obs is not None and self.obs.metrics is not None
+            else None)
         while self.heap:
             ev = self.heap.pop()
             now = self.clock.advance_to(ev.time_hours)
+            if ev_counts is not None:
+                k = ev.kind.name
+                ev_counts[k] = ev_counts.get(k, 0) + 1
             if ev.kind is EventKind.ARRIVAL:
                 self._on_arrival(now)
             elif (ev.kind is EventKind.CLIENT_READY
@@ -423,4 +455,11 @@ class AsyncEngineDriver:
             elif ev.kind is EventKind.INTENSITY_TICK:
                 self._on_tick(now)
         assert not self._pending, "event loop ended with tasks still queued"
+        if ev_counts is not None:
+            fam = self.obs.metrics.counter(
+                "sim_events_total", "Events processed by the sim loop",
+                labels=("kind",))
+            for k in sorted(ev_counts):
+                fam.inc(ev_counts[k], (k,))
+            self.metrics.export_obs(self.obs.metrics)
         return self.metrics

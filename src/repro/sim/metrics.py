@@ -177,6 +177,44 @@ class MetricsCollector:
             }
         return out
 
+    # -- obs bridge (DESIGN.md §9) ------------------------------------------
+    def export_obs(self, registry) -> None:
+        """Fold this collector into an obs :class:`MetricsRegistry`:
+        summary scalars as ``sim_*`` gauges, per-node completion/carbon
+        counters, per-tenant admission counters. Purely additive — the
+        ``to_text`` byte-identity surface never reads the registry."""
+        s = self.summary()
+        g = registry.gauge("sim_summary", "Sim summary scalars",
+                           labels=("key",))
+        for k in sorted(s):
+            v = s[k]
+            if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and v is not None:
+                g.set(float(v), (k,))
+        if self.records:
+            nodes = np.array([r.node for r in self.records])
+            carbon = np.array([r.carbon_g for r in self.records])
+            uniq, inverse = np.unique(nodes, return_inverse=True)
+            done = registry.counter("sim_tasks_total",
+                                    "Tasks completed per node",
+                                    labels=("node",))
+            cg = registry.counter("sim_carbon_g_total",
+                                  "Carbon billed per node (gCO2)",
+                                  labels=("node",))
+            rows = done.rows([(str(n),) for n in uniq])
+            done.inc_at(rows, np.bincount(inverse, minlength=uniq.size))
+            rows = cg.rows([(str(n),) for n in uniq])
+            cg.inc_at(rows, np.bincount(inverse, weights=carbon,
+                                        minlength=uniq.size))
+        adm = registry.counter("sim_admission_total",
+                               "Admission-loop outcomes per tenant",
+                               labels=("tenant", "outcome"))
+        for name, counts in (("rejected", self.rejected),
+                             ("abandoned", self.abandoned),
+                             ("retry", self.retries)):
+            for tenant in sorted(counts):
+                adm.inc(counts[tenant], (tenant or "-", name))
+
     # -- deterministic rendering --------------------------------------------
     def to_text(self) -> str:
         """Canonical report: one ``%.9g``-formatted line per metric, per

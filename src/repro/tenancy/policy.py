@@ -136,9 +136,32 @@ class TenantPolicy:
         if defer_risk_coverage is not None and not 0.0 < defer_risk_coverage < 1.0:
             raise ValueError("defer_risk_coverage must be in (0, 1) or None")
         self.defer_risk_coverage = defer_risk_coverage
+        # Observability (DESIGN.md §9): full-length per-task score capture
+        # assembled from the wrapped policy's per-mode sub-batches; the
+        # capture/profiler switches themselves forward to `inner`.
+        self.last_scores = None
 
     def register(self, spec: TenantSpec) -> TenantSpec:
         return self.registry.register(spec)
+
+    # -- observability passthrough (DESIGN.md §9) --------------------------
+    @property
+    def capture_scores(self) -> bool:
+        return bool(getattr(self.inner, "capture_scores", False))
+
+    @capture_scores.setter
+    def capture_scores(self, value: bool) -> None:
+        if hasattr(self.inner, "capture_scores"):
+            self.inner.capture_scores = bool(value)
+
+    @property
+    def profiler(self):
+        return getattr(self.inner, "profiler", None)
+
+    @profiler.setter
+    def profiler(self, value) -> None:
+        if hasattr(self.inner, "profiler"):
+            self.inner.profiler = value
 
     # -- shared helpers ----------------------------------------------------
     def _latency_threshold(self) -> float:
@@ -339,6 +362,11 @@ class TenantPolicy:
         """Scatter mode-grouped placements into ``out``: one wrapped
         ``select_batch`` per distinct effective mode (-1 = the caller's
         default weights)."""
+        agg = None
+        if self.capture_scores:
+            B = len(tasks)
+            agg = {"score": np.full(B, np.nan),
+                   "runner_up": np.full(B, np.nan)}
         for m in np.unique(modes):
             sel = positions[modes == m]
             w = weights if m < 0 else MODES[MODE_ORDER[m]]
@@ -347,6 +375,23 @@ class TenantPolicy:
                                           now_hour=now_hour)
             for i, ch in zip(sel, sub):
                 out[i] = ch
+            if agg is not None:
+                # scatter the sub-batch's capture into full-length columns
+                # (NB: a later budget fallback may move a task off its
+                # mode-chosen node; the captured score stays the mode
+                # selection's — DESIGN.md §9)
+                ls = getattr(self.inner, "last_scores", None)
+                if ls is not None and len(ls.get("score", ())) == len(sel):
+                    agg["score"][sel] = ls["score"]
+                    if ls.get("runner_up") is not None:
+                        agg["runner_up"][sel] = ls["runner_up"]
+                    cut = ls.get("cut")
+                    if cut is not None:
+                        agg.setdefault(
+                            "cut", np.full(len(tasks), -1,
+                                           dtype=np.int32))[sel] = cut
+        if agg is not None:
+            self.last_scores = agg
 
     def _budget_fallback(self, plan: AdmissionPlan,
                          out: List[Optional[str]], aidx: np.ndarray) -> None:
