@@ -194,6 +194,30 @@ def gate_obs(out_path: str = "BENCH_obs.json") -> Dict:
     return out
 
 
+def gate_resilience(out_path: str = "BENCH_resilience.json") -> Dict:
+    from benchmarks import resilience_churn
+
+    out = resilience_churn.run(smoke=True, out_path=out_path)
+    for key, ok in out["byte_identity"].items():
+        # zero-fault schedules must render byte-identically with
+        # resilience wired, and a fixed fault seed must repeat exactly
+        assert ok, f"resilience determinism contract broken: {key}"
+    oh = out["overhead"]
+    assert oh["overhead_x"] <= out["overhead_bound_x"], oh
+    base = out["cells"][0]
+    assert (base["crash_rate_per_hour"],
+            base["outage_rate_per_hour"]) == (1.0, 0.0), \
+        "baseline-churn cell missing from sweep"
+    floor = out["availability_floor"]
+    assert base["request_availability"] >= floor, base
+    for c in out["cells"]:
+        # every cell must keep serving: completions despite churn, and
+        # every submitted request resolved (completed or dead-lettered —
+        # nothing silently lost)
+        assert c["completed"] > 0, c
+    return out
+
+
 def _trend_rows(bench: Dict) -> Dict[tuple, float]:
     """(section, n_nodes, batch) -> per-task ms for the rows the trend
     gate tracks: cached selection and the end-to-end batched step."""
@@ -248,6 +272,7 @@ GATES: Dict[str, Callable] = {
     "tenancy": gate_tenancy,
     "partition": gate_partition,
     "obs": gate_obs,
+    "resilience": gate_resilience,
     "trend": gate_trend,
 }
 

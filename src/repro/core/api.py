@@ -444,7 +444,7 @@ class CarbonEdgeEngine:
                  monitor: Optional[CarbonMonitor] = None,
                  batch_size: Optional[int] = None,
                  batch_execute: bool = True,
-                 obs=None):
+                 obs=None, resilience=None, max_requeues: int = 5):
         self.cluster = cluster
         # Batched execute+billing fast path (DESIGN.md §6), on by default;
         # False forces the per-task loop — the bit-exact parity oracle
@@ -501,9 +501,33 @@ class CarbonEdgeEngine:
                 # per_region carbon agree
                 self.monitor.register_region(name, pue=cluster.pue)
         # Cheap always-on step accounting (surfaced by report()): steps
-        # drained and cumulative done/reject/defer verdict totals.
+        # drained and cumulative done/reject/defer verdict totals ("dead"
+        # and "retry" keys appear only once such an outcome occurred, so
+        # pre-resilience report consumers see an unchanged dict).
         self._steps = 0
         self._outcome_totals = {"done": 0, "reject": 0, "defer": 0}
+        # Requeue-loop guard (DESIGN.md §10): a task failing at the queue
+        # head `max_requeues` consecutive times stops re-raising and is
+        # consumed as a ("dead", reason) outcome instead — submitted work
+        # is never silently lost, but a permanently infeasible/unknown-node
+        # task can no longer livelock retrying callers. The first
+        # max_requeues-1 failures raise exactly as before.
+        if max_requeues < 1:
+            raise ValueError("max_requeues must be >= 1")
+        self.max_requeues = max_requeues
+        self._fail_task = None
+        self._fail_count = 0
+        self.dead_letters: List[tuple] = []     # (task, reason)
+        # Failure-aware scheduling (DESIGN.md §10): a repro.resilience.
+        # Resilience attaches the availability mask / circuit breakers to
+        # the cluster's FeatureCache, gates every placement against the
+        # ground-truth down set (failover re-placement), and converts
+        # unplaceable tasks into backoff retries that dead-letter after
+        # max_attempts. None (the default) keeps every path bit-identical.
+        self.resilience = resilience
+        self._attempts: Dict[int, int] = {}     # id(task) -> attempts so far
+        if resilience is not None:
+            resilience.bind(self)
         # Observability hub (DESIGN.md §9): a repro.obs.Observability with
         # any pillar enabled; None (the default) keeps every path
         # bit-identical at the cost of one `is not None` check per phase.
@@ -565,7 +589,12 @@ class CarbonEdgeEngine:
             return self._step_tenancy(batch, now_hour, results)
         obs = self.obs
         prof = obs.profiler if obs is not None else None
+        res = self.resilience
+        outcomes = exec_pos = None   # set iff the resilience gate fired
+        exec_batch: Sequence[Task] = batch
         try:
+            if res is not None:
+                res.tick(now_hour)
             t0 = perf_counter() if prof is not None else 0.0
             choices = self.policy.select_batch(
                 self.cluster, batch, self.weights, provider=self.provider,
@@ -579,24 +608,167 @@ class CarbonEdgeEngine:
             # same array, preserving batched/scalar parity.
             eff_fn = getattr(self.policy, "execution_latency_ms", None)
             base_override = eff_fn(batch) if eff_fn is not None else None
+            # Failure-aware gate (DESIGN.md §10): only when something is
+            # actually wrong — a ground-truth down node or an unplaceable
+            # task — otherwise the zero-fault path is untouched.
+            if res is not None and (res.down or None in choices):
+                outcomes = [None] * len(batch)
+                (exec_batch, choices, base_override,
+                 exec_pos, _, _) = self._apply_resilience(
+                     batch, choices, base_override, now_hour, outcomes,
+                     list(range(len(batch))))
             if self.batch_execute:
-                self._execute_batched(batch, choices, now_hour, results,
-                                      base_override)
+                self._execute_batched(exec_batch, choices, now_hour,
+                                      results, base_override)
             else:
-                self._execute_scalar(batch, choices, now_hour, results,
+                self._execute_scalar(exec_batch, choices, now_hour, results,
                                      base_override)
-        except BaseException:
-            # On ANY failure (infeasible node, provider KeyError, execution
-            # error) put everything not successfully executed back at the
-            # head of the queue, so submitted work is never silently lost.
-            self.queue = list(batch[len(results):]) + self.queue
+            if res is not None:
+                if res.health.suspect:
+                    res.note_success(set(choices[:len(results)]))
+                if self._attempts:
+                    for t in exec_batch:
+                        self._attempts.pop(id(t), None)
+        except BaseException as err:
+            tail = list(exec_batch[len(results):])
             self._outcome_totals["done"] += len(results)
-            raise
+            dead = (tail[0] if tail and self._note_failure(tail[0])
+                    else None)
+            if dead is None:
+                # On ANY failure (infeasible node, provider KeyError,
+                # execution error) put everything not successfully executed
+                # back at the head of the queue, so submitted work is never
+                # silently lost.
+                self.queue = tail + self.queue
+                if outcomes is not None:
+                    for j, r in zip(exec_pos, results):
+                        outcomes[j] = ("done", r)
+                    self.last_outcomes = outcomes
+                raise
+            # max_requeues-th consecutive failure of the same head task:
+            # consume it as a dead letter instead of requeuing it into an
+            # infinite raise/requeue loop (DESIGN.md §10)
+            reason = f"{type(err).__name__}: {err}"
+            self._record_dead(dead, reason)
+            if outcomes is None:
+                self.queue = tail[1:] + self.queue
+                self.last_outcomes = ([("done", r) for r in results]
+                                      + [("dead", reason)])
+            else:
+                # gate-fired step: park the unexecuted survivors as
+                # immediate retries so every consumed position carries an
+                # outcome (drivers stay aligned with the drained batch)
+                for j, r in zip(exec_pos, results):
+                    outcomes[j] = ("done", r)
+                outcomes[exec_pos[len(results)]] = ("dead", reason)
+                for j, t in zip(exec_pos[len(results) + 1:], tail[1:]):
+                    self.deferred.append((now_hour, t))
+                    self._outcome_totals["retry"] = \
+                        self._outcome_totals.get("retry", 0) + 1
+                    outcomes[j] = ("retry", now_hour)
+                self.last_outcomes = outcomes
+            return results
         self._outcome_totals["done"] += len(results)
+        if outcomes is not None:
+            for j, r in zip(exec_pos, results):
+                outcomes[j] = ("done", r)
+            self.last_outcomes = outcomes
         if obs is not None:
             # success-only (failed steps requeue and re-trace on retry)
             self._obs_record_step(obs, results, now_hour)
         return results
+
+    def _note_failure(self, task) -> bool:
+        """Track the consecutive-failure streak of the task at the failure
+        point; True once it has exhausted ``max_requeues`` attempts."""
+        if task is self._fail_task:
+            self._fail_count += 1
+        else:
+            self._fail_task = task
+            self._fail_count = 1
+        if self._fail_count < self.max_requeues:
+            return False
+        self._fail_task = None
+        self._fail_count = 0
+        return True
+
+    def _record_dead(self, task, reason: str) -> None:
+        self._outcome_totals["dead"] = \
+            self._outcome_totals.get("dead", 0) + 1
+        self.dead_letters.append((task, reason))
+        self._attempts.pop(id(task), None)
+
+    def _apply_resilience(self, tasks, choices, base_override, now_hour,
+                          outcomes, pos):
+        """The failure-aware gate between selection and execution
+        (DESIGN.md §10). Two stages:
+
+        1. **failover**: any task placed onto a ground-truth-down (or
+           unknown) node is a *contact failure* — breaker accounting plus
+           detection-by-contact masking — and its subset is re-scored in
+           one batched ``select_batch`` against the updated availability
+           mask. A partition policy re-bills failed-over tasks through
+           ``fallback_latency_ms`` (the cut-0 full-offload column): the
+           stranded split is discarded and the whole model re-runs on the
+           new node.
+        2. **retry/dead-letter**: tasks still unplaceable park on
+           ``self.deferred`` with capped exponential backoff (a
+           ``("retry", wake)`` outcome) until ``max_attempts``, then
+           dead-letter.
+
+        ``outcomes`` (full original-batch length) is written in place at
+        the removed tasks' ``pos`` entries. Returns the placed subset:
+        ``(tasks, choices, base_override, pos, keep, removed)`` with
+        ``keep``/``removed`` indexing the *incoming* lists.
+        """
+        res = self.resilience
+        down = res.down
+        nodes = self.cluster.nodes
+        choices = list(choices)
+        bad = [i for i, ch in enumerate(choices)
+               if ch is not None and (ch in down or ch not in nodes)]
+        if bad:
+            for n in {choices[i] for i in bad}:
+                res.contact_failure(n, now_hour)
+            sub = [tasks[i] for i in bad]
+            sub_choices = self.policy.select_batch(
+                self.cluster, sub, self.weights, provider=self.provider,
+                now_hour=now_hour)
+            fb = getattr(self.policy, "fallback_latency_ms", None)
+            if base_override is not None:
+                base_override = np.array(base_override, dtype=float)
+            for k, i in enumerate(bad):
+                choices[i] = sub_choices[k]
+                if (sub_choices[k] is not None and fb is not None
+                        and base_override is not None):
+                    base_override[i] = fb(tasks[i])
+        keep = list(range(len(tasks)))
+        removed: List[int] = []
+        if None in choices:
+            for i, ch in enumerate(choices):
+                if ch is not None:
+                    continue
+                t = tasks[i]
+                attempt = self._attempts.pop(id(t), 0) + 1
+                if attempt >= res.max_attempts:
+                    reason = f"no feasible node after {attempt} attempts"
+                    self._record_dead(t, reason)
+                    outcomes[pos[i]] = ("dead", reason)
+                else:
+                    self._attempts[id(t)] = attempt
+                    wake = now_hour + res.backoff_hours(attempt)
+                    self.deferred.append((wake, t))
+                    self._outcome_totals["retry"] = \
+                        self._outcome_totals.get("retry", 0) + 1
+                    outcomes[pos[i]] = ("retry", wake)
+                removed.append(i)
+            keep = [i for i, ch in enumerate(choices) if ch is not None]
+            tasks = [tasks[i] for i in keep]
+            choices = [choices[i] for i in keep]
+            if base_override is not None:
+                base_override = np.asarray(base_override, dtype=float)[keep]
+            pos = [pos[i] for i in keep]
+        return tasks, choices, base_override, pos, keep, removed
 
     def _step_tenancy(self, batch: Sequence[Task], now_hour: float,
                       results: List[TaskResult]) -> List[TaskResult]:
@@ -609,7 +781,10 @@ class CarbonEdgeEngine:
         batch fails mid-way."""
         obs = self.obs
         prof = obs.profiler if obs is not None else None
+        res = self.resilience
         try:
+            if res is not None:
+                res.tick(now_hour)
             t0 = perf_counter() if prof is not None else 0.0
             plan = self.policy.plan(self.cluster, batch,
                                     provider=self.provider,
@@ -643,6 +818,14 @@ class CarbonEdgeEngine:
             # rejected/deferred verdicts are consumed whatever happens next
             self._outcome_totals["reject"] += int(rej.size)
             self._outcome_totals["defer"] += int(deferred.size)
+        # admitted tenant ids / original-batch positions, kept consistent
+        # with exec_tasks through the resilience gate's rewrites
+        sel = np.asarray(plan.tenant_idx if aidx is None
+                         else plan.tenant_idx[aidx])
+        pos = (list(range(len(batch))) if aidx is None
+               else [int(i) for i in aidx])
+        gate_fired = False
+        dead_reason = None
         try:
             t0 = perf_counter() if prof is not None else 0.0
             full = self.policy.select_admitted(
@@ -652,41 +835,73 @@ class CarbonEdgeEngine:
                 prof.add("select", perf_counter() - t0)
             choices = (full if aidx is None
                        else [full[i] for i in aidx])
+            if res is not None and (res.down or None in choices):
+                gate_fired = True
+                (exec_tasks, choices, _, pos,
+                 keep, removed) = self._apply_resilience(
+                     exec_tasks, choices, None, now_hour, outcomes, pos)
+                if removed:
+                    # retried/dead tasks get re-planned (or never run):
+                    # reverse their admitted counting now
+                    self.policy.registry.uncount_admitted(sel[removed])
+                    sel = sel[keep]
             if self.batch_execute:
                 self._execute_batched(exec_tasks, choices, now_hour, results)
             else:
                 self._execute_scalar(exec_tasks, choices, now_hour, results)
-        except BaseException:
+            if res is not None:
+                if res.health.suspect:
+                    res.note_success(set(choices[:len(results)]))
+                if self._attempts:
+                    for t in exec_tasks:
+                        self._attempts.pop(id(t), None)
+        except BaseException as err:
             requeued = list(exec_tasks[len(results):])
-            self.queue = requeued + self.queue
             if requeued:
                 # requeued tasks get re-planned (and re-counted) on the
                 # retry, so reverse this plan's admitted counting for them
-                tid = (plan.tenant_idx if aidx is None
-                       else plan.tenant_idx[aidx])[len(results):]
-                self.policy.registry.uncount_admitted(tid)
-            raise
+                self.policy.registry.uncount_admitted(sel[len(results):])
+            dead = (requeued[0] if requeued
+                    and self._note_failure(requeued[0]) else None)
+            if dead is None:
+                self.queue = requeued + self.queue
+                raise
+            # attempt cap reached: consume the poisoned head as a dead
+            # letter (DESIGN.md §10) and keep the step's results
+            dead_reason = f"{type(err).__name__}: {err}"
+            self._record_dead(dead, dead_reason)
+            # park the unexecuted survivors as immediate retries so every
+            # consumed position carries an outcome — admitted positions can
+            # precede deferred/rejected ones, so a silent requeue would
+            # desynchronize outcome-tracking drivers from the drained batch
+            for j, t in zip(pos[len(results) + 1:], requeued[1:]):
+                self.deferred.append((now_hour, t))
+                self._outcome_totals["retry"] = \
+                    self._outcome_totals.get("retry", 0) + 1
+                outcomes[j] = ("retry", now_hour)
         finally:
             # charge exactly the executed prefix — on a mid-batch failure
             # that is the same set the cluster/monitor ledgers billed
             if results:
-                tid = (plan.tenant_idx if aidx is None
-                       else plan.tenant_idx[aidx])[:len(results)]
-                self.policy.charge(tid, [r.carbon_g for r in results],
-                                   now_hour)
+                self.policy.charge(sel[:len(results)],
+                                   [r.carbon_g for r in results], now_hour)
             # publish verdicts even when execution raised mid-batch:
             # rejected/deferred tasks were consumed, so a caller tracking
             # per-request state must still see them; None marks the
             # requeued admitted tail
-            pos = range(len(batch)) if aidx is None else aidx
-            for j, res in zip(pos, results):
-                outcomes[j] = ("done", res)
+            for j, r in zip(pos, results):
+                outcomes[j] = ("done", r)
+            if dead_reason is not None:
+                outcomes[pos[len(results)]] = ("dead", dead_reason)
             self.last_outcomes = outcomes
             self._outcome_totals["done"] += len(results)
+        if dead_reason is not None:
+            return results
         if obs is not None:
             # success-only, like the tenancy-free path
             self._obs_record_tenancy(obs, batch, plan, results, now_hour,
-                                     aidx)
+                                     aidx,
+                                     exec_pos=pos if gate_fired else None)
         return results
 
     def pop_ripe(self, now_hour: float) -> List[Task]:
@@ -1011,11 +1226,14 @@ class CarbonEdgeEngine:
             prof.add("observe", perf_counter() - t0)
 
     def _obs_record_tenancy(self, obs, batch, plan, results, now_hour,
-                            aidx) -> None:
+                            aidx, exec_pos=None) -> None:
         """Trace + metrics for one successful admission-controlled step:
         full-length rows (rejected/deferred tasks get their verdict with
         no placement), executed columns scattered at the admitted
-        positions from the batched-execute snapshot."""
+        positions from the batched-execute snapshot. ``exec_pos`` (set
+        when the resilience gate rewrote the admitted subset) overrides
+        the executed positions and sources verdicts from the published
+        outcomes, so retried/dead rows trace as such."""
         trace, metrics = obs.trace, obs.metrics
         if trace is None and metrics is None:
             return
@@ -1024,13 +1242,20 @@ class CarbonEdgeEngine:
         from repro.tenancy.policy import ADMIT as _ADMIT
         from repro.tenancy.policy import REJECT as _REJECT
         B = len(batch)
-        # explicit action -> trace-verdict map (the two encodings order
-        # DEFER/REJECT differently)
-        verdict = np.where(
-            plan.actions == _ADMIT, 0,
-            np.where(plan.actions == _REJECT, 1, 2)).astype(np.int8)
-        pos_exec = (np.arange(len(results)) if aidx is None
-                    else np.asarray(aidx))
+        if exec_pos is not None:
+            from repro.obs.trace import VERDICT_LABELS
+            codes = {k: c for c, k in enumerate(VERDICT_LABELS)}
+            verdict = np.array([codes[o[0]] for o in self.last_outcomes],
+                               dtype=np.int8)
+            pos_exec = np.asarray(exec_pos[:len(results)], dtype=int)
+        else:
+            # explicit action -> trace-verdict map (the two encodings order
+            # DEFER/REJECT differently)
+            verdict = np.where(
+                plan.actions == _ADMIT, 0,
+                np.where(plan.actions == _REJECT, 1, 2)).astype(np.int8)
+            pos_exec = (np.arange(len(results)) if aidx is None
+                        else np.asarray(aidx))
         uniq = inverse = carbon = None
         if results:
             snap = self._exec_snapshot
@@ -1098,7 +1323,8 @@ class CarbonEdgeEngine:
                 self._obs_metrics_nodes(metrics, uniq, inverse, carbon)
             fam = metrics.counter("engine_outcomes_total",
                                   "step outcomes by verdict", ("verdict",))
-            for code, label in enumerate(("done", "reject", "defer")):
+            for code, label in enumerate(
+                    ("done", "reject", "defer", "dead", "retry")):
                 n = int((verdict == code).sum())
                 if n:
                     fam.inc(n, labels=(label,))
@@ -1119,6 +1345,13 @@ class CarbonEdgeEngine:
         }
         if self._tenancy is not None:
             rep["tenants"] = self._tenancy.registry.report()
+        if self.resilience is not None or self.dead_letters:
+            rep["resilience"] = {
+                "dead_letters": len(self.dead_letters),
+                "retrying": len(self._attempts),
+            }
+            if self.resilience is not None:
+                rep["resilience"].update(self.resilience.report())
         if deep:
             rep["deep"] = self._report_deep()
         return rep

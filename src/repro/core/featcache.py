@@ -52,6 +52,13 @@ class FeatureCache:
         # (the VectorizedPolicy selection memo, DESIGN.md §6) may reuse any
         # pure function of the columns while data_rev is unchanged.
         self.data_rev = 0
+        # Resilience columns (DESIGN.md §10), owned by an attached
+        # repro.resilience.FleetHealth: `avail` is the (N,) bool
+        # availability mask node_ok() ANDs in, `fail_count` the (N,)
+        # cumulative contact-failure counter. Both stay None — literally
+        # absent, zero cost, bit-identical — until the health layer has
+        # something to say; every mask mutation bumps data_rev.
+        self._health = None
         self._rebuild()
 
     # -- construction / refresh -------------------------------------------
@@ -61,6 +68,8 @@ class FeatureCache:
                     "free_mem", "avg_time_ms", "avg_time_s", "running",
                     "power", "e_est", "carbon_static"):
             setattr(self, col, np.zeros(n))
+        self.avail = None        # (N,) bool mask, or None = all available
+        self.fail_count = None   # (N,) cumulative failures, or None
 
     def _refresh_row(self, i: int, st) -> bool:
         # Scalar per-row math, in exactly featurize's evaluation order, so
@@ -111,6 +120,10 @@ class FeatureCache:
         self.data_rev += 1
         self._reset_intensity_cache()
         self._part_blocks = {}
+        if self._health is not None:
+            # re-project the health mask onto the new topology — a rebuild
+            # must not silently unmask a blocked node (DESIGN.md §10)
+            self._health.push(self)
 
     def sync(self) -> None:
         """Bring columns up to date: O(changed) row refreshes, or a full
@@ -201,10 +214,15 @@ class FeatureCache:
     # -- masks -------------------------------------------------------------
     def node_ok(self, latency_threshold_ms: float = float("inf")) -> np.ndarray:
         """(N,) Algorithm-1 line-3 filter: overload cut-off plus the
-        policy's latency threshold."""
+        policy's latency threshold, ANDed with the resilience availability
+        mask when one is attached (DESIGN.md §10) — so every cached scorer
+        path (tensor, column, Pallas, partition) masks down/broken nodes
+        vectorized, never by Python filtering."""
         ok = self.load <= LOAD_THRESHOLD
         if latency_threshold_ms != float("inf"):
             ok = ok & (self.avg_time_ms <= latency_threshold_ms)
+        if self.avail is not None:
+            ok = ok & self.avail
         return ok
 
     def feasible(self, task_cpu: np.ndarray, task_mem: np.ndarray,

@@ -26,14 +26,15 @@ from typing import Dict, Union
 
 from repro.obs.profiler import SPAN_EDGES_S, StepProfiler
 from repro.obs.registry import DEFAULT_EDGES, Family, MetricsRegistry
-from repro.obs.trace import (MODE_LABELS, VERDICT_DEFER, VERDICT_DONE,
-                             VERDICT_LABELS, VERDICT_REJECT, DecisionTrace)
+from repro.obs.trace import (MODE_LABELS, VERDICT_DEAD, VERDICT_DEFER,
+                             VERDICT_DONE, VERDICT_LABELS, VERDICT_REJECT,
+                             VERDICT_RETRY, DecisionTrace)
 
 __all__ = [
     "DEFAULT_EDGES", "DecisionTrace", "Family", "MetricsRegistry",
     "MODE_LABELS", "Observability", "SPAN_EDGES_S", "StepProfiler",
-    "VERDICT_DEFER", "VERDICT_DONE", "VERDICT_LABELS", "VERDICT_REJECT",
-    "console_logger",
+    "VERDICT_DEAD", "VERDICT_DEFER", "VERDICT_DONE", "VERDICT_LABELS",
+    "VERDICT_REJECT", "VERDICT_RETRY", "console_logger",
 ]
 
 

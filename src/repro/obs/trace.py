@@ -28,7 +28,8 @@ import numpy as np
 # repro.tenancy.policy orders its action constants ADMIT/DEFER/REJECT —
 # the engine maps explicitly, never by passing action codes through.
 VERDICT_DONE, VERDICT_REJECT, VERDICT_DEFER = 0, 1, 2
-VERDICT_LABELS = ("done", "reject", "defer")
+VERDICT_DEAD, VERDICT_RETRY = 3, 4       # resilience outcomes (DESIGN.md §10)
+VERDICT_LABELS = ("done", "reject", "defer", "dead", "retry")
 
 # Mode encoding for the ``mode`` column; must match
 # ``repro.tenancy.spec.MODE_ORDER`` (kept duplicated so repro.obs imports
@@ -248,7 +249,10 @@ class DecisionTrace:
         order = self._order()
         counts = np.bincount(self.verdict[order],
                              minlength=len(VERDICT_LABELS))
-        return {lbl: int(counts[i]) for i, lbl in enumerate(VERDICT_LABELS)}
+        # resilience verdicts appear only when present, so pre-§10
+        # consumers keep seeing the original three-key dict
+        return {lbl: int(counts[i]) for i, lbl in enumerate(VERDICT_LABELS)
+                if i < 3 or counts[i]}
 
     def cut_histogram(self) -> Dict[int, int]:
         """Retained-row counts per partition cut index (placed rows with a

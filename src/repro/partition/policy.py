@@ -415,3 +415,21 @@ class PartitionPolicy:
         if self._last_eff is None or len(self._last_eff) != len(tasks):
             return None
         return self._last_eff
+
+    def set_link_mbps(self, link_mbps: float) -> None:
+        """Retune the uplink bandwidth mid-run (a link flap, DESIGN.md
+        §10): recomputes the per-cut comm column and rotates the
+        FeatureCache block key so the next score sees the new link —
+        restoring the original value restores bit-identical columns."""
+        self.link_mbps = float(link_mbps)
+        self._cs = self.profile.comm_seconds(self.link_mbps)
+        self._block_key = (self.profile, self.link_mbps)
+
+    def fallback_latency_ms(self, task: Task) -> float:
+        """Engine failover hook (DESIGN.md §10): when a task's offload
+        target died after selection, the split is stranded — re-bill the
+        whole model on the replacement node through the cut-0
+        (full-offload) column: base latency scaled by remote_frac[0]
+        (= 1.0) plus the full-payload transfer."""
+        return float(task.base_latency_ms * self._rf[0]
+                     + self._cs[0] * 1000.0)

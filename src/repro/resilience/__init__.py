@@ -1,0 +1,28 @@
+"""Fault injection & failure-aware scheduling (DESIGN.md §10).
+
+Four pieces, composable with every existing layer:
+
+- :class:`FaultInjector` / :class:`Fault` — seeded deterministic fault
+  schedules (node crash/recover with detection lag, provider blackout
+  windows, latency stragglers, link flaps), surfaced as
+  ``NODE_DOWN``/``NODE_UP``/``PROVIDER_OUTAGE`` sim events;
+- :class:`FleetHealth` — the scheduler's availability mask + per-node
+  circuit breakers, masked *inside* the batched/Pallas scorer through
+  the FeatureCache ``avail`` column;
+- :class:`Resilience` — the engine attachment: ground-truth down set,
+  failover re-placement, capped-exponential-backoff retry and the
+  dead-letter outcome;
+- :class:`ResilientProvider` — last-known-good degraded mode for carbon
+  feeds, widening conformal intervals with staleness.
+
+Contract: with resilience enabled and a zero-fault schedule, every sim
+report is byte-identical to a resilience-free run on both execute paths;
+a fixed fault seed reproduces runs byte-identically.
+"""
+from repro.resilience.faults import Fault, FaultInjector
+from repro.resilience.health import FleetHealth
+from repro.resilience.policy import Resilience
+from repro.resilience.provider import ResilientProvider
+
+__all__ = ["Fault", "FaultInjector", "FleetHealth", "Resilience",
+           "ResilientProvider"]

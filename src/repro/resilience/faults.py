@@ -1,0 +1,226 @@
+"""Seeded deterministic fault schedules + their runtime application.
+
+A :class:`FaultInjector` holds an immutable, pre-generated list of
+:class:`Fault` entries — node crash/recover pairs (with an optional
+*detection lag*: the scheduler's availability mask only learns of a crash
+``detect_delay_hours`` later, or earlier by contact), carbon-provider
+blackout windows, latency-straggler windows (a node's profiled
+``avg_time_ms`` is inflated, scoring-visible through the FeatureCache
+dirty sink) and link-bandwidth flaps (a partition policy's uplink is
+retuned via ``set_link_mbps``). The schedule is a pure function of
+``(seed, parameters)`` built from one ``np.random.default_rng(seed)``
+stream, so a fixed fault seed reproduces byte-identical runs
+(DESIGN.md §10).
+
+The sim driver surfaces each fault as an event — ``NODE_DOWN`` (crash /
+detect / straggle / flap), ``NODE_UP`` (recover / window close) or
+``PROVIDER_OUTAGE`` (blackout open/close) — and calls
+:meth:`FaultInjector.apply` when it fires; engine-only callers (the churn
+benchmark's oracle loop) use :meth:`advance` instead. One injector drives
+one run: it carries restore state (saved ``avg_time_ms``, saved link
+speed), so build a fresh injector (same seed) per repeat.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.sim.events import EventKind
+
+# fault kind -> sim event kind
+_EVENT_KIND = {
+    "crash": EventKind.NODE_DOWN, "detect": EventKind.NODE_DOWN,
+    "straggle": EventKind.NODE_DOWN, "flap": EventKind.NODE_DOWN,
+    "recover": EventKind.NODE_UP, "unstraggle": EventKind.NODE_UP,
+    "unflap": EventKind.NODE_UP,
+    "blackout": EventKind.PROVIDER_OUTAGE,
+    "restore": EventKind.PROVIDER_OUTAGE,
+}
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled fault transition."""
+
+    hour: float
+    kind: str            # key of _EVENT_KIND
+    node: str = ""       # empty for provider-wide faults
+    factor: float = 1.0  # straggle avg_time multiplier / flap link fraction
+    detected: bool = True  # crash only: mask immediately (no detection lag)
+
+    @property
+    def event_kind(self) -> EventKind:
+        return _EVENT_KIND[self.kind]
+
+
+@dataclass
+class FaultInjector:
+    """A deterministic fault schedule plus its runtime application state."""
+
+    schedule: List[Fault] = field(default_factory=list)
+    _cursor: int = field(default=0, repr=False)
+    _saved_avg: Dict[str, float] = field(default_factory=dict, repr=False)
+    _saved_link: Optional[float] = field(default=None, repr=False)
+    _flap_depth: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        self.schedule = sorted(self.schedule, key=lambda f: f.hour)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def scripted(cls, faults: Sequence[Fault]) -> "FaultInjector":
+        return cls(list(faults))
+
+    @classmethod
+    def generate(cls, nodes: Sequence[str], horizon_hours: float, *,
+                 seed: int = 0,
+                 crash_rate_per_hour: float = 0.0,
+                 mttr_hours: float = 0.2,
+                 detect_delay_hours: float = 0.0,
+                 outage_rate_per_hour: float = 0.0,
+                 outage_hours: float = 0.3,
+                 straggle_rate_per_hour: float = 0.0,
+                 straggle_hours: float = 0.2,
+                 straggle_factor: float = 3.0,
+                 flap_rate_per_hour: float = 0.0,
+                 flap_hours: float = 0.2,
+                 flap_factor: float = 0.25) -> "FaultInjector":
+        """Seeded churn: per-node Poisson crash (and straggle) processes,
+        a global Poisson blackout/flap process. All windows are
+        exponential; repairs may complete past the horizon (the events
+        simply fire after the last arrival)."""
+        rng = np.random.default_rng(seed)
+        faults: List[Fault] = []
+
+        def windows(rate: float, mean_len: float):
+            t = 0.0
+            while rate > 0.0:
+                t += rng.exponential(1.0 / rate)
+                if t >= horizon_hours:
+                    return
+                dur = rng.exponential(mean_len)
+                yield t, t + dur
+                t += dur
+
+        for node in nodes:
+            for t0, t1 in windows(crash_rate_per_hour, mttr_hours):
+                detected = detect_delay_hours <= 0.0
+                faults.append(Fault(t0, "crash", node, detected=detected))
+                if not detected:
+                    faults.append(Fault(t0 + detect_delay_hours, "detect",
+                                        node))
+                faults.append(Fault(t1, "recover", node))
+        for node in nodes:
+            for t0, t1 in windows(straggle_rate_per_hour, straggle_hours):
+                faults.append(Fault(t0, "straggle", node,
+                                    factor=straggle_factor))
+                faults.append(Fault(t1, "unstraggle", node))
+        for t0, t1 in windows(outage_rate_per_hour, outage_hours):
+            faults.append(Fault(t0, "blackout"))
+            faults.append(Fault(t1, "restore"))
+        for t0, t1 in windows(flap_rate_per_hour, flap_hours):
+            faults.append(Fault(t0, "flap", factor=flap_factor))
+            faults.append(Fault(t1, "unflap"))
+        return cls(faults)
+
+    def without_detection_lag(self) -> "FaultInjector":
+        """The fault-oracle variant of this schedule: same faults, but
+        every crash is detected at onset — the scheduler never places
+        onto a dead node, so the delta against the lagged run is pure
+        carbon/latency regret of imperfect failure knowledge."""
+        return FaultInjector([
+            Fault(f.hour, f.kind, f.node, f.factor, True)
+            for f in self.schedule if f.kind != "detect"])
+
+    # -- application -------------------------------------------------------
+    def apply(self, fault: Fault, engine) -> None:
+        """Mutate ground truth / scheduler state for one fault. Crash,
+        detect and recover need an engine built with ``resilience=``;
+        straggle, flap and blackout degrade any engine."""
+        res = getattr(engine, "resilience", None)
+        k = fault.kind
+        if k == "crash":
+            if res is not None:
+                res.node_down(fault.node, detected=fault.detected)
+        elif k == "detect":
+            if res is not None and fault.node in res.down:
+                res.detect(fault.node)
+        elif k == "recover":
+            if res is not None:
+                res.node_up(fault.node)
+        elif k == "straggle":
+            st = engine.cluster.nodes.get(fault.node)
+            if st is not None and fault.node not in self._saved_avg:
+                self._saved_avg[fault.node] = st.avg_time_ms
+                st.avg_time_ms = st.avg_time_ms * fault.factor
+        elif k == "unstraggle":
+            orig = self._saved_avg.pop(fault.node, None)
+            st = engine.cluster.nodes.get(fault.node)
+            if st is not None and orig is not None:
+                st.avg_time_ms = orig    # bit-exact restore of the profile
+        elif k == "flap":
+            pol = getattr(engine, "policy", None)
+            set_link = getattr(pol, "set_link_mbps", None)
+            if set_link is not None:
+                if self._flap_depth == 0:
+                    self._saved_link = pol.link_mbps
+                    set_link(pol.link_mbps * fault.factor)
+                self._flap_depth += 1
+        elif k == "unflap":
+            if self._flap_depth > 0:
+                self._flap_depth -= 1
+                if self._flap_depth == 0:
+                    engine.policy.set_link_mbps(self._saved_link)
+        elif k == "blackout":
+            begin = getattr(getattr(engine, "provider", None),
+                            "begin_blackout", None)
+            if begin is not None:
+                begin()
+        elif k == "restore":
+            end = getattr(getattr(engine, "provider", None),
+                          "end_blackout", None)
+            if end is not None:
+                end()
+        else:
+            raise ValueError(f"unknown fault kind {k!r}")
+
+    def advance(self, now_hour: float, engine) -> int:
+        """Apply every not-yet-applied fault with ``hour <= now_hour`` (in
+        schedule order); returns how many fired. For engine-only loops —
+        the sim driver applies via events instead."""
+        fired = 0
+        while (self._cursor < len(self.schedule)
+               and self.schedule[self._cursor].hour <= now_hour):
+            self.apply(self.schedule[self._cursor], engine)
+            self._cursor += 1
+            fired += 1
+        return fired
+
+    # -- schedule statistics ----------------------------------------------
+    def crash_windows(self) -> List[tuple]:
+        """(node, down_hour, up_hour) per crash (repair possibly > horizon)."""
+        open_at: Dict[str, float] = {}
+        out = []
+        for f in self.schedule:
+            if f.kind == "crash":
+                open_at[f.node] = f.hour
+            elif f.kind == "recover" and f.node in open_at:
+                out.append((f.node, open_at.pop(f.node), f.hour))
+        return out
+
+    def mttr_hours(self) -> float:
+        """Mean time-to-repair over the schedule's crash windows."""
+        w = self.crash_windows()
+        if not w:
+            return 0.0
+        return float(np.mean([up - down for _, down, up in w]))
+
+    def fleet_availability(self, n_nodes: int, horizon_hours: float) -> float:
+        """1 - (node-down-hours / node-hours) within the horizon."""
+        if n_nodes <= 0 or horizon_hours <= 0:
+            return 1.0
+        down = sum(min(up, horizon_hours) - min(down_h, horizon_hours)
+                   for _, down_h, up in self.crash_windows())
+        return 1.0 - down / (n_nodes * horizon_hours)

@@ -1,0 +1,169 @@
+"""Scheduler-side fleet health: availability mask + circuit breakers.
+
+:class:`FleetHealth` is the *scheduler's belief* about which nodes are
+servable — distinct from ground truth (a crashed node the scheduler has
+not detected yet is down in :attr:`repro.resilience.Resilience.down` but
+still unmasked here). It owns two FeatureCache columns (DESIGN.md §10):
+
+- ``cache.avail``      — (N,) bool availability mask, ``None`` while every
+  node is believed healthy so the zero-fault path pays nothing and stays
+  bit-identical (``FeatureCache.node_ok`` ANDs it only when present);
+- ``cache.fail_count`` — (N,) cumulative contact-failure counter, ``None``
+  until the first failure (observability / benchmark surface only — the
+  scorer masks through ``avail``, never filters in Python).
+
+Circuit-breaker state machine (per node):
+
+- **CLOSED**: consecutive contact failures accumulate; at
+  ``breaker_threshold`` the breaker OPENS — the node is masked for
+  ``cooldown * 2^(trips-1)`` hours, capped at ``cooldown_cap``.
+- **OPEN**: masked; :meth:`tick` unmasks it when the cooldown expires.
+- **HALF-OPEN** (expired cooldown): the node takes traffic again; one
+  successful execution resets the failure streak and trip count
+  (CLOSED), one more failure re-opens it with a doubled cooldown.
+
+Detected crashes (``set_manual``) mask the node until the matching
+``NODE_UP`` independently of the breaker. Every mask mutation bumps
+``cache.data_rev`` so the selection memo and partition blocks recompute.
+"""
+from __future__ import annotations
+
+from typing import Dict, Set
+
+import numpy as np
+
+
+class FleetHealth:
+    """Availability mask + per-node circuit breakers for one cluster."""
+
+    def __init__(self, breaker_threshold: int = 3,
+                 breaker_cooldown_hours: float = 0.25,
+                 breaker_cooldown_cap_hours: float = 2.0):
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_hours = float(breaker_cooldown_hours)
+        self.breaker_cooldown_cap_hours = float(breaker_cooldown_cap_hours)
+        self.blocked: Set[str] = set()        # masked = manual | open breaker
+        self.manual: Set[str] = set()         # detected-crash marks
+        self.consec: Dict[str, int] = {}      # consecutive contact failures
+        self.trips: Dict[str, int] = {}       # breaker open count (backoff)
+        self.open_until: Dict[str, float] = {}
+        self.fails_total: Dict[str, int] = {} # cumulative, never reset
+
+    # -- cache plumbing ----------------------------------------------------
+    def push(self, cache) -> None:
+        """(Re)build the mask columns on ``cache`` from current state —
+        called on attach and by ``FeatureCache._rebuild`` (topology
+        changes must not silently unmask a blocked node)."""
+        blocked = self.blocked & set(cache.index)
+        if not blocked and not self.fails_total:
+            if cache.avail is not None or cache.fail_count is not None:
+                cache.avail = None
+                cache.fail_count = None
+                cache.data_rev += 1
+            return
+        mask = np.ones(cache.n, dtype=bool)
+        fails = np.zeros(cache.n)
+        for name in blocked:
+            mask[cache.index[name]] = False
+        for name, k in self.fails_total.items():
+            i = cache.index.get(name)
+            if i is not None:
+                fails[i] = k
+        cache.avail = mask
+        cache.fail_count = fails
+        cache.data_rev += 1
+
+    def _block(self, name: str, cache) -> None:
+        if name in self.blocked:
+            return
+        self.blocked.add(name)
+        i = cache.index.get(name)
+        if i is None:
+            return
+        if cache.avail is None:
+            cache.avail = np.ones(cache.n, dtype=bool)
+        cache.avail[i] = False
+        cache.data_rev += 1
+
+    def _unblock(self, name: str, cache) -> None:
+        if name not in self.blocked:
+            return
+        self.blocked.discard(name)
+        if cache.avail is None:
+            return
+        if not (self.blocked & set(cache.index)):
+            cache.avail = None
+        else:
+            i = cache.index.get(name)
+            if i is not None:
+                cache.avail[i] = True
+        cache.data_rev += 1
+
+    # -- transitions -------------------------------------------------------
+    def set_manual(self, name: str, cache) -> None:
+        """Mask a node the scheduler now knows is down (fault detection —
+        by schedule or by contact)."""
+        self.manual.add(name)
+        self._block(name, cache)
+
+    def clear_manual(self, name: str, cache, now_hour: float) -> None:
+        """A ``NODE_UP`` for a detected crash: unmask unless a breaker
+        still holds the node open."""
+        self.manual.discard(name)
+        if self.open_until.get(name, -np.inf) <= now_hour:
+            self.open_until.pop(name, None)
+            self._unblock(name, cache)
+
+    def record_failure(self, name: str, now_hour: float, cache) -> None:
+        """One contact failure: bump streak + cumulative column; open the
+        breaker (capped exponential cooldown) at the threshold."""
+        c = self.consec.get(name, 0) + 1
+        self.consec[name] = c
+        self.fails_total[name] = self.fails_total.get(name, 0) + 1
+        if cache.fail_count is None:
+            cache.fail_count = np.zeros(cache.n)
+        i = cache.index.get(name)
+        if i is not None:
+            cache.fail_count[i] += 1.0
+        if c >= self.breaker_threshold:
+            t = self.trips.get(name, 0)
+            self.trips[name] = t + 1
+            self.open_until[name] = now_hour + min(
+                self.breaker_cooldown_hours * (2.0 ** t),
+                self.breaker_cooldown_cap_hours)
+            self._block(name, cache)
+
+    def record_success(self, name: str, cache) -> None:
+        """A half-open node served successfully: close its breaker."""
+        if self.consec.pop(name, None) is not None:
+            self.trips.pop(name, None)
+            if self.open_until.pop(name, None) is not None \
+                    and name not in self.manual:
+                self._unblock(name, cache)
+
+    def tick(self, now_hour: float, cache) -> None:
+        """Expire elapsed breaker cooldowns (OPEN -> HALF-OPEN): unmask
+        unless the node is also manually down. O(1) when no breaker is
+        open."""
+        if not self.open_until:
+            return
+        expired = [n for n, t in self.open_until.items() if t <= now_hour]
+        for n in expired:
+            del self.open_until[n]
+            if n not in self.manual:
+                self._unblock(n, cache)
+
+    @property
+    def suspect(self) -> bool:
+        """Any node mid-streak or blocked — the engine's cheap guard for
+        its success-bookkeeping pass."""
+        return bool(self.consec or self.blocked)
+
+    def report(self) -> Dict:
+        return {
+            "blocked": sorted(self.blocked),
+            "manual_down": sorted(self.manual),
+            "open_breakers": {n: t for n, t in sorted(self.open_until.items())},
+            "consecutive_failures": dict(sorted(self.consec.items())),
+            "failures_total": dict(sorted(self.fails_total.items())),
+        }

@@ -1,0 +1,95 @@
+"""Failure-aware scheduling configuration + ground-truth fault state.
+
+:class:`Resilience` is what ``CarbonEdgeEngine(resilience=...)`` takes:
+retry/dead-letter knobs plus the two state layers DESIGN.md §10
+separates —
+
+- :attr:`down` — **ground truth**: nodes that are actually dead right
+  now (mutated by the :class:`~repro.resilience.FaultInjector`). The
+  engine consults it at execute time: a placement onto a down node is a
+  *contact failure*, detected immediately (detection-by-contact) and
+  failed over.
+- :attr:`health` — the **scheduler's belief** (:class:`~repro.
+  resilience.FleetHealth`): the availability mask + circuit breakers the
+  batched/Pallas scorer masks through. With a detection lag the two
+  disagree for a window, which is exactly what makes failover, retry
+  and the breaker machinery exercisable.
+
+Tasks that still have no feasible node after failover park with capped
+exponential backoff (``backoff_base_hours * 2^(attempt-1)``, capped at
+``backoff_cap_hours``) and dead-letter after ``max_attempts``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Set
+
+from repro.resilience.health import FleetHealth
+
+
+class Resilience:
+    """Engine-side failure handling: attach via
+    ``CarbonEdgeEngine(..., resilience=Resilience())``."""
+
+    def __init__(self, *, max_attempts: int = 4,
+                 backoff_base_hours: float = 0.02,
+                 backoff_cap_hours: float = 0.5,
+                 health: FleetHealth = None):
+        if max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        self.max_attempts = int(max_attempts)
+        self.backoff_base_hours = float(backoff_base_hours)
+        self.backoff_cap_hours = float(backoff_cap_hours)
+        self.health = health if health is not None else FleetHealth()
+        self.down: Set[str] = set()
+        self._engine = None
+
+    def bind(self, engine) -> None:
+        """Wire the health mask into the engine cluster's FeatureCache
+        (rebuilds re-push it — see ``FeatureCache._rebuild``)."""
+        self._engine = engine
+        cache = engine.cluster.feature_cache()
+        cache._health = self.health
+        self.health.push(cache)
+
+    def _cache(self):
+        return self._engine.cluster.feature_cache()
+
+    # -- ground-truth transitions (FaultInjector) --------------------------
+    def node_down(self, name: str, detected: bool = True) -> None:
+        self.down.add(name)
+        if detected:
+            self.health.set_manual(name, self._cache())
+
+    def detect(self, name: str) -> None:
+        """The lagged detection of an earlier crash reached the scheduler."""
+        self.health.set_manual(name, self._cache())
+
+    def node_up(self, name: str) -> None:
+        self.down.discard(name)
+        self.health.clear_manual(name, self._cache(), float("-inf"))
+
+    # -- engine hooks ------------------------------------------------------
+    def tick(self, now_hour: float) -> None:
+        self.health.tick(now_hour, self._cache())
+
+    def contact_failure(self, name: str, now_hour: float) -> None:
+        """The engine placed onto ``name`` and it was dead/unknown:
+        breaker accounting + detection-by-contact masking."""
+        cache = self._cache()
+        self.health.record_failure(name, now_hour, cache)
+        if name in self.down:
+            self.health.set_manual(name, cache)
+
+    def note_success(self, names: Iterable[str]) -> None:
+        """Successful executions close half-open breakers / reset streaks
+        (call only when ``health.suspect`` — the zero-fault path skips)."""
+        cache = self._cache()
+        for n in names:
+            self.health.record_success(n, cache)
+
+    def backoff_hours(self, attempt: int) -> float:
+        return min(self.backoff_base_hours * (2.0 ** max(0, attempt - 1)),
+                   self.backoff_cap_hours)
+
+    def report(self) -> Dict:
+        return {"down": sorted(self.down), "health": self.health.report()}

@@ -88,7 +88,7 @@ class AsyncEngineDriver:
                  tick_hours: float = 0.0,
                  clients: Optional[ClosedLoopClientPool] = None,
                  risk_coverage: Optional[float] = None,
-                 obs=None):
+                 obs=None, faults=None):
         if arrivals is None and clients is None:
             raise ValueError("need an arrival process, a closed-loop "
                              "client pool, or both")
@@ -124,6 +124,11 @@ class AsyncEngineDriver:
         # Observability to the engine and the driver to get one unified
         # profiler/registry across both layers.
         self.obs = obs if obs is not None and obs.enabled else None
+        # Fault injection (DESIGN.md §10): a repro.resilience.FaultInjector
+        # whose schedule is surfaced as NODE_DOWN/NODE_UP/PROVIDER_OUTAGE
+        # events and applied to the executor when each fires. None (the
+        # default) leaves the event loop byte-identical.
+        self.faults = faults
         self.clock = VirtualClock(start_hour)
         self.heap = EventHeap()
         self.metrics = MetricsCollector(slo_latency_s=slo_latency_s)
@@ -306,9 +311,19 @@ class AsyncEngineDriver:
                     verdict, at = pool.on_reject(p.client, exec_hour)
                     self._client_verdict(p.client, verdict, at, p.tenant)
                 continue
-            if kind == "defer":
+            if kind == "defer" or kind == "retry":
+                # a resilience retry parks on the executor exactly like a
+                # budget deferral: wake at `val`, resubmit, re-plan
                 self._parked.append((val, exec_hour, p))
                 self.heap.push(val, EventKind.DEFER_WAKE, payload=None)
+                continue
+            if kind == "dead":
+                # dead letter (DESIGN.md §10): the executor consumed the
+                # task permanently; a closed-loop client sees a rejection
+                self.metrics.count_dead(p.tenant)
+                if pool is not None and p.client is not None:
+                    verdict, at = pool.on_reject(p.client, exec_hour)
+                    self._client_verdict(p.client, verdict, at, p.tenant)
                 continue
             res = val
             if hasattr(res, "latency_ms"):        # serial cluster result
@@ -398,6 +413,11 @@ class AsyncEngineDriver:
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> MetricsCollector:
+        if self.faults is not None:
+            # pushed before arrivals so a fault and an arrival at the same
+            # instant resolve fault-first (heap ties break by push order)
+            for f in self.faults.schedule:
+                self.heap.push(float(f.hour), f.event_kind, payload=f)
         if self.arrivals is not None:
             for t in self.arrivals.times(self.start_hour, self.horizon_hours):
                 self.heap.push(float(t), EventKind.ARRIVAL)
@@ -454,6 +474,10 @@ class AsyncEngineDriver:
                 self._on_batch_ready(now)
             elif ev.kind is EventKind.INTENSITY_TICK:
                 self._on_tick(now)
+            elif (ev.kind is EventKind.NODE_DOWN
+                  or ev.kind is EventKind.NODE_UP
+                  or ev.kind is EventKind.PROVIDER_OUTAGE):
+                self.faults.apply(ev.payload, self.executor)
         assert not self._pending, "event loop ended with tasks still queued"
         if ev_counts is not None:
             fam = self.obs.metrics.counter(

@@ -1,6 +1,6 @@
 """Event model for the discrete-event simulator (DESIGN.md §2).
 
-Six event kinds drive the serving loop:
+Nine event kinds drive the serving loop:
 
 - ``ARRIVAL``        — an open-loop request enters the system;
 - ``CLIENT_READY``   — a closed-loop client's think time elapsed: it
@@ -13,7 +13,15 @@ Six event kinds drive the serving loop:
   parked task tuple) or a budget-deferred tenant's next accounting
   period (payload ``None`` — the driver polls ``engine.pop_ripe``)
   has arrived;
-- ``INTENSITY_TICK`` — periodic sample point for the carbon/latency timeline.
+- ``INTENSITY_TICK`` — periodic sample point for the carbon/latency timeline;
+- ``NODE_DOWN``      — a node degrades (payload: the
+  :class:`repro.resilience.Fault` — a crash, a latency-straggler window
+  opening, a link flap, or the delayed *detection* of an earlier crash,
+  DESIGN.md §10);
+- ``NODE_UP``        — the matching restoration (recover / window close);
+- ``PROVIDER_OUTAGE`` — a carbon-provider blackout window opens or closes
+  (payload: the Fault; the injector toggles the engine provider's
+  last-known-good degraded mode).
 
 Determinism contract: events are totally ordered by
 ``(time_hours, seq)`` where ``seq`` is a per-heap monotonic counter
@@ -36,6 +44,9 @@ class EventKind(Enum):
     BATCH_READY = "batch_ready"
     DEFER_WAKE = "defer_wake"
     INTENSITY_TICK = "intensity_tick"
+    NODE_DOWN = "node_down"
+    NODE_UP = "node_up"
+    PROVIDER_OUTAGE = "provider_outage"
 
 
 @dataclass(frozen=True, order=True)

@@ -80,6 +80,10 @@ class MetricsCollector:
     rejected: Dict[str, int] = field(default_factory=dict)
     abandoned: Dict[str, int] = field(default_factory=dict)
     retries: Dict[str, int] = field(default_factory=dict)
+    # Dead-lettered tasks (resilience attempt cap, DESIGN.md §10). Kept
+    # out of summary() and rendered only when non-empty, so zero-fault
+    # reports stay byte-identical to pre-resilience ones.
+    dead: Dict[str, int] = field(default_factory=dict)
 
     def add(self, rec: TaskRecord) -> None:
         self.records.append(rec)
@@ -97,6 +101,9 @@ class MetricsCollector:
 
     def count_retry(self, tenant: str = "") -> None:
         self.retries[tenant] = self.retries.get(tenant, 0) + 1
+
+    def count_dead(self, tenant: str = "") -> None:
+        self.dead[tenant] = self.dead.get(tenant, 0) + 1
 
     # -- reductions ---------------------------------------------------------
     def wait_histogram(self) -> List[int]:
@@ -137,7 +144,7 @@ class MetricsCollector:
             if r.tenant:
                 groups.setdefault(r.tenant, []).append(r)
         for name in (set(self.rejected) | set(self.abandoned)
-                     | set(self.retries)):
+                     | set(self.retries) | set(self.dead)):
             if name:
                 groups.setdefault(name, [])
         return groups
@@ -211,7 +218,8 @@ class MetricsCollector:
                                labels=("tenant", "outcome"))
         for name, counts in (("rejected", self.rejected),
                              ("abandoned", self.abandoned),
-                             ("retry", self.retries)):
+                             ("retry", self.retries),
+                             ("dead", self.dead)):
             for tenant in sorted(counts):
                 adm.inc(counts[tenant], (tenant or "-", name))
 
@@ -238,6 +246,11 @@ class MetricsCollector:
                 f"slo_met={t['slo_met']} "
                 f"rejected={t['rejected']} abandoned={t['abandoned']} "
                 f"retries={t['retries']} deferred={t['deferred']}")
+        # dead-letter lines appear only when something dead-lettered, so
+        # zero-fault renderings stay byte-identical (DESIGN.md §10)
+        for name in sorted(self.dead):
+            lines.append(f"dead tenant={name or '-'} "
+                         f"count={self.dead[name]}")
         for t in self.timeline:
             lines.append(f"tick hour={t.hour:.9g} completed={t.completed} "
                          f"carbon_g={t.carbon_g_cum:.9g} "
