@@ -10,7 +10,8 @@ function here, so a red CI can be reproduced and debugged from a checkout:
     PYTHONPATH=src:. python -m benchmarks.ci_gates tenancy
     PYTHONPATH=src:. python -m benchmarks.ci_gates partition
     PYTHONPATH=src:. python -m benchmarks.ci_gates obs
-    PYTHONPATH=src:. python -m benchmarks.ci_gates trend --baseline PREV.json
+    PYTHONPATH=src:. python -m benchmarks.ci_gates sim_scale
+    PYTHONPATH=src:. python -m benchmarks.ci_gates trend --baseline bench-baseline/
 
 (or ``python -m benchmarks.run --gate NAME`` — same registry.)
 
@@ -49,10 +50,20 @@ Gates:
   the N=10^4, B=1024 acceptance row (median of interleaved adjacent-pair
   ratios; small rows where fixed costs dominate get a loose backstop) and
   never changes a decision; writes BENCH_obs.json.
-- **trend** — compare this checkout's fleet-scale end-to-end per-task
-  times against a previous run's ``BENCH_fleet_scale.json`` (CI restores
-  the last main-branch run via actions/cache) and fail on a >2x relative
-  regression on any matching row.
+- **sim_scale** — internet-scale sim (DESIGN.md §11): the array-based
+  event calendar is byte-identical with the scalar heap oracle on a
+  real-engine scenario across event_queue x batch_execute, on every
+  measured replay and closed-loop row, and on a 24 h multi-region CSV
+  trace replay; open-loop replay rows at >=10^5 events must show >=10x
+  per-event speedup over the heap (closed-loop rows, fragmented by the
+  oracle's own window-flush semantics, get a loose floor) plus a loose
+  absolute per-event backstop; writes BENCH_sim_scale.json.
+- **trend** — compare this checkout's per-task/per-event costs against a
+  previous main-branch run (CI restores a ``bench-baseline/`` directory
+  holding every ``BENCH_*.json`` via actions/cache) and fail on a >2x
+  relative regression on any matching row; rows are discovered
+  recursively from the JSON, so new benchmark files are covered without
+  per-file code. ``--baseline`` accepts the directory or a single file.
 
 Each gate returns the measured payload so callers can log it; failures
 raise ``AssertionError`` with the offending row attached.
@@ -218,45 +229,119 @@ def gate_resilience(out_path: str = "BENCH_resilience.json") -> Dict:
     return out
 
 
-def _trend_rows(bench: Dict) -> Dict[tuple, float]:
-    """(section, n_nodes, batch) -> per-task ms for the rows the trend
-    gate tracks: cached selection and the end-to-end batched step."""
-    rows = {}
-    for r in bench.get("select", []):
-        rows[("select", r["n_nodes"], r["batch"])] = r["cached_per_task_ms"]
-    for r in bench.get("step", []):
-        rows[("step", r["n_nodes"], r["batch"])] = r["batched_per_task_ms"]
+def gate_sim_scale(out_path: str = "BENCH_sim_scale.json") -> Dict:
+    from benchmarks import sim_scale
+
+    out = sim_scale.run(smoke=True, out_path=out_path)
+    for key, ok in out["byte_identity"].items():
+        assert ok, f"heap-oracle contract broken: {key}"
+    tr = out["trace_replay"]
+    assert tr["repeat_match"] and tr["queue_match"] \
+        and tr["exec_path_match"], tr
+    for r in out["replay"] + out["closed_loop"]:
+        assert r["byte_identity"], r
+        # loose absolute backstop (CI runners vary)
+        assert r["calendar_per_event_us"] < 50.0, r
+    big = [r for r in out["replay"] if r["events"] >= 100_000]
+    assert big, "replay sweep lost its >=10^5-event acceptance row"
+    for r in big:
+        # the acceptance number: pure array drains at scale
+        assert r["speedup_x"] >= 10.0, r
+    for r in out["closed_loop"]:
+        # window-flush re-arming fragments runs identically in both
+        # queues (oracle semantics), so byte identity is the contract
+        # here and speed only a loose floor
+        assert r["speedup_x"] > 1.5, r
+    return out
+
+
+# Suffixes of the cost metrics the trend gate tracks across runs.
+_TREND_SUFFIXES = ("per_task_ms", "per_event_us")
+
+
+def _trend_rows(bench, prefix: tuple = ()) -> Dict[tuple, float]:
+    """(path, row-identity, metric) -> value for every per-task /
+    per-event cost in a bench JSON, discovered recursively so new
+    benchmark files are tracked without per-file code. A row's identity
+    is its scalar non-metric fields (n_nodes, batch, n_clients, ...), so
+    reordering a sweep doesn't fake a regression and a reshaped sweep
+    simply stops matching."""
+    rows: Dict[tuple, float] = {}
+    if isinstance(bench, dict):
+        metrics = {k: v for k, v in bench.items()
+                   if isinstance(v, (int, float)) and not isinstance(v, bool)
+                   and k.endswith(_TREND_SUFFIXES)}
+        if metrics:
+            ident = tuple(sorted(
+                (k, v) for k, v in bench.items()
+                if isinstance(v, (str, int)) and not isinstance(v, bool)
+                and not k.endswith(_TREND_SUFFIXES)))
+            for k, v in metrics.items():
+                rows[(prefix, ident, k)] = float(v)
+        for k, v in bench.items():
+            rows.update(_trend_rows(v, prefix + (k,)))
+    elif isinstance(bench, list):
+        for item in bench:
+            rows.update(_trend_rows(item, prefix))
     return rows
+
+
+def _trend_compare(base: Dict[tuple, float], cur: Dict[tuple, float],
+                   label: str):
+    compared, failures = 0, []
+    for key, base_v in sorted(base.items()):
+        cur_v = cur.get(key)
+        if cur_v is None or base_v <= 0:
+            continue
+        compared += 1
+        ratio = cur_v / base_v
+        path, ident, metric = key
+        name = "/".join(path + (metric,))
+        print(f"trend {label} {name} {dict(ident)}: "
+              f"{base_v:.4g} -> {cur_v:.4g}  ({ratio:.2f}x)")
+        if ratio > TREND_MAX_SLOWDOWN_X:
+            failures.append((label, key, base_v, cur_v, ratio))
+    return compared, failures
 
 
 def gate_trend(baseline: Optional[str] = None,
                current: str = "BENCH_fleet_scale.json") -> Dict:
-    """Relative regression gate against a previous run's bench JSON.
+    """Relative regression gate against a previous run's bench output.
 
-    Passes (with a notice) when there is no baseline yet — the first run
-    on a fresh cache has nothing to compare against — and when the
-    baseline has no matching rows (sweep shape changed)."""
+    ``baseline`` is normally the cached ``bench-baseline/`` directory —
+    every ``BENCH_*.json`` it holds is compared against the same-named
+    file in the working directory (written by the smoke gates earlier in
+    the CI job). A single baseline file is still accepted and compared
+    against ``current``. Passes (with a notice) when there is no
+    baseline yet — the first run on a fresh cache has nothing to compare
+    against — and when the baseline has no matching rows (sweep shape
+    changed)."""
     if baseline is None or not os.path.exists(baseline):
         print(f"trend: no baseline at {baseline!r}; nothing to compare")
         return {"compared": 0}
-    with open(baseline) as f:
-        base = _trend_rows(json.load(f))
-    if not os.path.exists(current):
-        # gate_fleet writes it; standalone trend runs may need to
-        gate_fleet(out_path=current)
-    with open(current) as f:
-        cur = _trend_rows(json.load(f))
+    if os.path.isdir(baseline):
+        pairs = []
+        for name in sorted(os.listdir(baseline)):
+            if not (name.startswith("BENCH_") and name.endswith(".json")):
+                continue
+            if not os.path.exists(name):
+                print(f"trend: no current {name}; skipping")
+                continue
+            pairs.append((name, os.path.join(baseline, name), name))
+    else:
+        if not os.path.exists(current):
+            # gate_fleet writes it; standalone trend runs may need to
+            gate_fleet(out_path=current)
+        pairs = [(os.path.basename(baseline), baseline, current)]
     compared, failures = 0, []
-    for key, base_ms in base.items():
-        cur_ms = cur.get(key)
-        if cur_ms is None or base_ms <= 0:
-            continue
-        compared += 1
-        ratio = cur_ms / base_ms
-        print(f"trend {key}: {base_ms*1e3:8.2f} -> {cur_ms*1e3:8.2f} us/task"
-              f"  ({ratio:.2f}x)")
-        if ratio > TREND_MAX_SLOWDOWN_X:
-            failures.append((key, base_ms, cur_ms, ratio))
+    for label, base_path, cur_path in pairs:
+        with open(base_path) as f:
+            base = _trend_rows(json.load(f))
+        with open(cur_path) as f:
+            cur = _trend_rows(json.load(f))
+        c, fails = _trend_compare(base, cur, label)
+        compared += c
+        failures += fails
     assert not failures, (
         f">{TREND_MAX_SLOWDOWN_X:.1f}x per-task regression vs baseline: "
         f"{failures}")
@@ -273,6 +358,7 @@ GATES: Dict[str, Callable] = {
     "partition": gate_partition,
     "obs": gate_obs,
     "resilience": gate_resilience,
+    "sim_scale": gate_sim_scale,
     "trend": gate_trend,
 }
 
@@ -301,6 +387,7 @@ if __name__ == "__main__":
     p.add_argument("gate", nargs="?", default="all",
                    help=f"one of {sorted(GATES)} or 'all' (default)")
     p.add_argument("--baseline", default=None,
-                   help="previous BENCH_fleet_scale.json for the trend gate")
+                   help="baseline for the trend gate: a bench-baseline/ "
+                        "directory of BENCH_*.json files, or a single file")
     args = p.parse_args()
     main(gate=args.gate, baseline=args.baseline)

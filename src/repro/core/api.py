@@ -232,6 +232,162 @@ class TraceProvider:
         cov = getattr(self.fallback, "covers", None)
         return bool(cov(node)) if cov is not None else self.fallback is not None
 
+    @classmethod
+    def from_csv(cls, source: str, *,
+                 node_zones: Optional[Mapping[str, str]] = None,
+                 fallback: Optional[CarbonIntensityProvider] = None,
+                 zone_column: Optional[str] = None,
+                 value_column: Optional[str] = None,
+                 time_column: Optional[str] = None) -> "TraceProvider":
+        """Build a provider from an ElectricityMaps-style regional CSV.
+
+        ``node_zones`` maps node names onto CSV zones so a fleet can share
+        a handful of regional feeds; omitted, the zones themselves are the
+        keys (nodes named after their zone resolve directly).
+        """
+        zones = load_intensity_csv(source, zone_column=zone_column,
+                                   value_column=value_column,
+                                   time_column=time_column)
+        if node_zones is None:
+            traces: Dict[str, object] = dict(zones)
+        else:
+            traces = {}
+            for node, zone in node_zones.items():
+                if zone not in zones:
+                    raise KeyError(
+                        f"zone {zone!r} for node {node!r} not in CSV "
+                        f"(zones: {sorted(zones)})")
+                traces[node] = zones[zone]
+        return cls(traces=traces, fallback=fallback)
+
+
+_CSV_TIME_COLS = ("datetime", "timestamp", "hour", "time")
+_CSV_ZONE_COLS = ("zone", "zone_name", "zone_key", "zone_id", "region")
+
+
+def _csv_hour(text: str) -> float:
+    """A CSV timestamp as simulator hours: numeric hours pass through;
+    ISO datetimes become hours elapsed since midnight of the first day
+    (callers subtract a common base, so only differences matter)."""
+    try:
+        return float(text)
+    except ValueError:
+        pass
+    from datetime import datetime, timezone
+
+    dt = datetime.fromisoformat(text.strip().replace("Z", "+00:00"))
+    if dt.tzinfo is None:
+        dt = dt.replace(tzinfo=timezone.utc)
+    return dt.timestamp() / 3600.0
+
+
+def load_intensity_csv(source: str, *,
+                       zone_column: Optional[str] = None,
+                       value_column: Optional[str] = None,
+                       time_column: Optional[str] = None) -> Dict[str, object]:
+    """Parse a regional carbon-intensity CSV (ElectricityMaps export
+    shape: one row per (timestamp, zone)) into per-zone
+    :class:`~repro.core.temporal.SeriesTrace` signals.
+
+    ``source`` is a path, or the CSV text itself when it contains a
+    newline. Columns are auto-detected unless named explicitly: time from
+    ``datetime``/``timestamp``/``hour``/``time``, zone from ``zone``/
+    ``zone_name``/``zone_key``/``zone_id``/``region`` (a single-zone CSV
+    may omit it — zone ``""``), value from the first header mentioning
+    ``carbon_intensity`` then ``intensity``. Rows per zone are sorted by
+    time and must be uniformly spaced; ISO datetimes are rebased so the
+    earliest stamp in the file is hour-of-day of that stamp (a midnight-
+    started day trace lands on hours 0..23, matching ``IntensityTrace``).
+    """
+    import csv
+    import io
+
+    from repro.core.temporal import SeriesTrace
+
+    if "\n" in source:
+        fh = io.StringIO(source)
+    else:
+        fh = open(source, newline="")
+    try:
+        reader = csv.DictReader(fh)
+        headers = [h.strip() for h in (reader.fieldnames or [])]
+        low = {h.lower(): h for h in headers}
+
+        def pick(explicit, candidates, what, required=True):
+            if explicit is not None:
+                if explicit not in headers:
+                    raise KeyError(f"{what} column {explicit!r} not in CSV "
+                                   f"header {headers}")
+                return explicit
+            for c in candidates:
+                if c in low:
+                    return low[c]
+            if required:
+                raise KeyError(f"no {what} column found in CSV header "
+                               f"{headers}")
+            return None
+
+        tcol = pick(time_column, _CSV_TIME_COLS, "time")
+        zcol = pick(zone_column, _CSV_ZONE_COLS, "zone", required=False)
+        if value_column is not None:
+            vcol = pick(value_column, (), "value")
+        else:
+            vcol = next((h for h in headers
+                         if "carbon_intensity" in h.lower()),
+                        None) or next((h for h in headers
+                                       if "intensity" in h.lower()), None)
+            if vcol is None:
+                raise KeyError(
+                    f"no carbon-intensity column found in CSV header "
+                    f"{headers}")
+
+        rows: Dict[str, List[tuple]] = {}
+        iso_seen = False
+        for rec in reader:
+            t_text = (rec.get(tcol) or "").strip()
+            v_text = (rec.get(vcol) or "").strip()
+            if not t_text or not v_text:
+                continue      # ElectricityMaps exports gap rows as blanks
+            try:
+                float(t_text)
+            except ValueError:
+                iso_seen = True
+            zone = (rec.get(zcol) or "").strip() if zcol else ""
+            rows.setdefault(zone, []).append((_csv_hour(t_text),
+                                              float(v_text)))
+        if not rows:
+            raise ValueError("CSV contains no intensity rows")
+
+        if iso_seen:
+            # Rebase absolute epoch-hours so the file's earliest stamp
+            # keeps its hour-of-day and everything else is relative to it.
+            t0 = min(t for series in rows.values() for t, _ in series)
+            base = t0 - (t0 % 24.0)
+            rows = {z: [(t - base, v) for t, v in series]
+                    for z, series in rows.items()}
+
+        out: Dict[str, object] = {}
+        for zone, series in rows.items():
+            series.sort(key=lambda tv: tv[0])
+            hours = [t for t, _ in series]
+            values = [v for _, v in series]
+            if len(hours) > 1:
+                steps = np.diff(np.asarray(hours, dtype=float))
+                step = float(steps[0])
+                if step <= 0 or not np.allclose(steps, step, rtol=1e-6,
+                                                atol=1e-9):
+                    raise ValueError(
+                        f"zone {zone!r}: rows are not uniformly spaced "
+                        f"in time (steps {sorted(set(steps.tolist()))[:4]})")
+            else:
+                step = 1.0
+            out[zone] = SeriesTrace(region=zone, values=tuple(values),
+                                    start_hour=float(hours[0]),
+                                    step_hours=step)
+        return out
+    finally:
+        fh.close()
+
 
 @dataclass(frozen=True)
 class FallbackProvider:
@@ -533,6 +689,14 @@ class CarbonEdgeEngine:
         # bit-identical at the cost of one `is not None` check per phase.
         self.obs = obs if obs is not None and obs.enabled else None
         self._exec_snapshot = None
+        # Per-step execution columns (DESIGN.md §11): after a fully
+        # successful batched-execute step, ``(uniq_nodes, inverse,
+        # latency_ms, energy_kwh, carbon_g)`` arrays carrying the same
+        # floats the step's TaskResults do — the sim driver's columnar
+        # record path consumes them instead of re-gathering O(B)
+        # attributes. None whenever the last step used the scalar path,
+        # partially failed, or went through tenancy admission.
+        self.last_exec = None
         if self.obs is not None:
             self._wire_obs()
 
@@ -579,6 +743,7 @@ class CarbonEdgeEngine:
         """
         self.last_outcomes = None
         self._exec_snapshot = None
+        self.last_exec = None
         if not self.queue:
             return []
         b = limit if limit is not None else (self.batch_size or len(self.queue))
@@ -1048,13 +1213,23 @@ class CarbonEdgeEngine:
             # cost model (the same call execute_batch makes) rather than
             # gathered back out of the B result objects — same floats, no
             # O(B) attribute reads, one source of truth for the math.
-            _, e_kwh = self.cluster.latency_energy(base, distributed=True)
+            lat_ms, e_kwh = self.cluster.latency_energy(base,
+                                                        distributed=True)
             self.monitor.record_energy_batch(
                 nodes, e_kwh, hour=now_hour, intensities=bv[inverse],
                 groups=groups)
             if prof is not None:
                 prof.add("bill", perf_counter() - t0)
             results.extend(res)
+            if failure is None:
+                # whole batch executed: publish the step's execution
+                # columns for the sim driver's columnar record path
+                # (DESIGN.md §11). carbon_g here is the same elementwise
+                # expression execute_batch evaluated, so the arrays carry
+                # the exact floats the TaskResults do.
+                self.last_exec = (uniq, inverse, lat_ms, e_kwh,
+                                  carbon_g(e_kwh, ev[inverse],
+                                           self.cluster.pue))
             if obs is not None and (obs.trace is not None
                                     or obs.metrics is not None):
                 # stash the already-computed batched arrays so the trace/
@@ -1124,10 +1299,11 @@ class CarbonEdgeEngine:
             if not self.queue:
                 # idle but budget-deferred work exists: jump the clock to
                 # the earliest wake inside the window
-                wakes = [w for w, _ in self.deferred if w < end_hour]
-                if not wakes:
+                wake = min((w for w, _ in self.deferred if w < end_hour),
+                           default=None)
+                if wake is None:
                     break
-                now = max(now, min(wakes))
+                now = max(now, wake)
                 continue
             qlen = len(self.queue)
             results = self.step(now, limit=limit)

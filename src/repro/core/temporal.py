@@ -89,6 +89,43 @@ def synthetic_trace(region: str, base: float, solar_dip: float = 0.35,
 
 
 @dataclass(frozen=True)
+class SeriesTrace:
+    """A measured intensity series on a uniform time grid — the shape an
+    ElectricityMaps-style regional CSV export has (DESIGN.md §11): one
+    value every ``step_hours`` from ``start_hour``, *not* wrapped over
+    24 h (a day-long replay ends where the data ends; reads past either
+    edge clamp to it).
+
+    ``at`` is one array-aware code path: a scalar hour returns a float, an
+    hour array returns an array of the exact same elementwise arithmetic —
+    so :meth:`TraceProvider.intensity` and ``intensity_batch`` agree
+    bit-for-bit, which the multi-region replay determinism test pins.
+    """
+
+    region: str
+    values: Tuple[float, ...]
+    start_hour: float = 0.0
+    step_hours: float = 1.0
+
+    def at(self, hour):
+        v = np.asarray(self.values, dtype=float)
+        if v.size == 1:
+            out = np.full(np.shape(hour), v[0])
+            return float(out) if np.ndim(hour) == 0 else out
+        pos = (np.asarray(hour, dtype=float) - self.start_hour) \
+            / self.step_hours
+        pos = np.clip(pos, 0.0, float(v.size - 1))
+        i = np.minimum(np.floor(pos).astype(np.int64), v.size - 2)
+        frac = pos - i
+        out = v[i] * (1 - frac) + v[i + 1] * frac
+        return float(out) if np.ndim(hour) == 0 else out
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.values))
+
+
+@dataclass(frozen=True)
 class DeferrableTask(Task):
     deadline_hours: float = 0.0            # 0 => not deferrable
     duration_hours: float = 0.1

@@ -10,7 +10,8 @@ from repro.sim.arrivals import (ArrivalProcess, ClientPopulation,
                                 PoissonArrivals, TraceReplayArrivals)
 from repro.sim.clock import VirtualClock, hours_to_s, ms_to_hours, s_to_hours
 from repro.sim.driver import AsyncEngineDriver, BatchExecutor
-from repro.sim.events import Event, EventHeap, EventKind
+from repro.sim.events import (Event, EventCalendar, EventHeap, EventKind,
+                              SimExhausted)
 from repro.sim.metrics import (MetricsCollector, TaskRecord, TimelineSample,
                                WAIT_HIST_EDGES_S)
 
@@ -20,6 +21,6 @@ __all__ = [
     "MMPPArrivals", "PoissonArrivals", "TraceReplayArrivals",
     "VirtualClock", "hours_to_s", "ms_to_hours", "s_to_hours",
     "AsyncEngineDriver", "BatchExecutor",
-    "Event", "EventHeap", "EventKind",
+    "Event", "EventCalendar", "EventHeap", "EventKind", "SimExhausted",
     "MetricsCollector", "TaskRecord", "TimelineSample", "WAIT_HIST_EDGES_S",
 ]

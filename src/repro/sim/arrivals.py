@@ -214,24 +214,55 @@ class ClientPopulation:
 
 class ClosedLoopClientPool:
     """Per-tenant closed-loop client populations driving CLIENT_READY /
-    RETRY events (DESIGN.md §7).
+    RETRY events (DESIGN.md §7, vectorized per §11).
 
     Determinism contract: all think-time draws come from one
     ``np.random.Generator`` consumed in event-processing order, which the
-    event heap makes a pure function of the scenario — so two same-seed
+    event queue makes a pure function of the scenario — so two same-seed
     runs (and the batched vs scalar execute paths, which produce
     identical completions) replay identical client behaviour.
+
+    State lives in per-client *columns* (the TenantRegistry pattern,
+    DESIGN.md §7): attempts, think means, SLOs and backoff parameters are
+    numpy arrays indexed by client id. The scalar ``on_ready`` /
+    ``on_complete`` / ``on_reject`` methods (the heap-oracle path) and
+    the ``*_batch`` methods (the calendar path) read the same columns and
+    consume the same RNG stream draw-for-draw: numpy Generators produce
+    identical values whether ``exponential``/``uniform`` is called once
+    per element or once with the parameter vector, which the parity tests
+    pin down.
     """
 
     def __init__(self, populations: Sequence[ClientPopulation], seed: int = 0):
         self.populations = list(populations)
         self._rng = np.random.default_rng(seed)
-        self._pop: List[ClientPopulation] = []   # per client
-        self._attempts: List[int] = []           # per client, current request
+        self._pop: List[ClientPopulation] = []   # per client (scalar path)
+        self.tenant_names: List[str] = []
+        tenant_idx: dict = {}
+        codes: List[int] = []
         for p in self.populations:
+            code = tenant_idx.get(p.tenant)
+            if code is None:
+                code = tenant_idx[p.tenant] = len(self.tenant_names)
+                self.tenant_names.append(p.tenant)
             for _ in range(p.n_clients):
                 self._pop.append(p)
-                self._attempts.append(0)
+                codes.append(code)
+        n = len(self._pop)
+        self._attempts = np.zeros(n, dtype=np.int64)  # current request
+        self._tenant_code = np.asarray(codes, dtype=np.int64)
+        self._mean_think = np.array(
+            [p.mean_think_hours for p in self._pop], dtype=float)
+        self._slo = np.array([p.slo_latency_s for p in self._pop],
+                             dtype=float)
+        self._max_attempts = np.array([p.max_attempts for p in self._pop],
+                                      dtype=np.int64)
+        self._backoff_base = np.array(
+            [p.backoff_base_hours for p in self._pop], dtype=float)
+        self._backoff_cap = np.array(
+            [p.backoff_cap_hours for p in self._pop], dtype=float)
+        self._priority = np.array([p.priority for p in self._pop],
+                                  dtype=np.int64)
 
     @property
     def n_clients(self) -> int:
@@ -250,18 +281,22 @@ class ClosedLoopClientPool:
         return min(p.backoff_base_hours * (2.0 ** tries),
                    p.backoff_cap_hours)
 
+    def initial_events_arrays(self, start_hour: float):
+        """Vectorized :meth:`initial_events`: ``(hours, client_ids)``
+        arrays in the same (hour, -priority, client_id) order, drawn from
+        the same RNG stream position (one ``uniform`` call over the
+        per-client think-mean column instead of n scalar draws)."""
+        ats = start_hour + self._rng.uniform(0.0, self._mean_think)
+        order = np.lexsort((np.arange(self.n_clients), -self._priority, ats))
+        return ats[order], order.astype(np.int64)
+
     def initial_events(self, start_hour: float) -> List:
         """(hour, client_id) first-request times, staggered uniformly over
         each client's mean think time. Sorted by (hour, -priority,
         client_id) so same-instant requests enqueue higher-priority
         tenants first — the only scheduling effect of ``priority``."""
-        out = []
-        for cid in range(self.n_clients):
-            p = self._pop[cid]
-            at = start_hour + float(self._rng.uniform(0, p.mean_think_hours))
-            out.append((at, cid))
-        out.sort(key=lambda e: (e[0], -self._pop[e[1]].priority, e[1]))
-        return out
+        ats, cids = self.initial_events_arrays(start_hour)
+        return list(zip(ats.tolist(), cids.tolist()))
 
     def on_ready(self, client_id: int) -> str:
         """The client issues a request; returns its tenant name."""
@@ -300,3 +335,68 @@ class ClosedLoopClientPool:
         back = self._backoff(client_id)
         self._attempts[client_id] += 1
         return "retry", now_hour + back
+
+    # -- batched verdicts (DESIGN.md §11: the calendar driver's path) -------
+    def tenant_codes_of(self, client_ids: np.ndarray) -> np.ndarray:
+        """Tenant code per client (index into :attr:`tenant_names`)."""
+        return self._tenant_code[client_ids]
+
+    def on_ready_batch(self, client_ids: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`on_ready` over a CLIENT_READY/RETRY run:
+        first tries mark attempt 1; returns tenant codes. No RNG."""
+        att = self._attempts[client_ids]
+        self._attempts[client_ids] = np.where(att == 0, 1, att)
+        return self._tenant_code[client_ids]
+
+    def _failed_batch(self, ids: np.ndarray, att: np.ndarray,
+                      fail: np.ndarray, now_hours: np.ndarray,
+                      next_hours: np.ndarray):
+        """Shared retry/abandon ladder over the failing subset; fills
+        ``next_hours`` for retries and returns (retry_mask,
+        abandon_mask, think_pending_mask) over the full batch. Think
+        draws for abandons are left to the caller so ok+abandon draws
+        stay in completion order (one stream, DESIGN.md §2.2)."""
+        abandon = fail & (att >= self._max_attempts[ids])
+        retry = fail & ~abandon
+        if retry.any():
+            tries = np.maximum(att[retry] - 1, 0)
+            back = np.minimum(
+                self._backoff_base[ids[retry]] * (2.0 ** tries),
+                self._backoff_cap[ids[retry]])
+            next_hours[retry] = now_hours[retry] + back
+        self._attempts[ids] = np.where(retry, att + 1, 0)
+        return retry, abandon
+
+    def on_complete_batch(self, client_ids: np.ndarray,
+                          latencies_s: np.ndarray, now_hours: np.ndarray):
+        """Vectorized :meth:`on_complete` over a completion batch, RNG
+        draw-for-draw identical to the scalar loop: one ``exponential``
+        call covers the ok+abandon think times in completion order (retry
+        backoff is deterministic and draws nothing). Returns
+        ``(retry_mask, abandon_mask, next_hours)``."""
+        ids = np.asarray(client_ids)
+        att = self._attempts[ids]
+        ok = latencies_s <= self._slo[ids]
+        next_hours = np.empty(ids.size, dtype=float)
+        retry, abandon = self._failed_batch(ids, att, ~ok, now_hours,
+                                            next_hours)
+        think = ok | abandon
+        if think.any():
+            next_hours[think] = now_hours[think] + self._rng.exponential(
+                self._mean_think[ids[think]])
+        return retry, abandon, next_hours
+
+    def on_reject_batch(self, client_ids: np.ndarray,
+                        now_hours: np.ndarray):
+        """Vectorized :meth:`on_reject`: every request in the batch
+        failed admission — same ladder, same RNG order."""
+        ids = np.asarray(client_ids)
+        att = self._attempts[ids]
+        next_hours = np.empty(ids.size, dtype=float)
+        fail = np.ones(ids.size, dtype=bool)
+        retry, abandon = self._failed_batch(ids, att, fail, now_hours,
+                                            next_hours)
+        if abandon.any():
+            next_hours[abandon] = now_hours[abandon] + self._rng.exponential(
+                self._mean_think[ids[abandon]])
+        return retry, abandon, next_hours

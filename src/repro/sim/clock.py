@@ -8,6 +8,8 @@ from the cluster; :func:`ms_to_hours` is the single conversion point.
 """
 from __future__ import annotations
 
+import numpy as np
+
 MS_PER_HOUR = 3.6e6
 
 
@@ -40,4 +42,22 @@ class VirtualClock:
             raise ValueError(
                 f"clock cannot run backwards: at {self._now}, asked for {hour}")
         self._now = max(self._now, float(hour))
+        return self._now
+
+    def advance_run(self, hours) -> float:
+        """Advance through a whole event run (a nondecreasing hour array
+        from ``EventCalendar.pop_run``) in one call, applying the same
+        no-backward-travel check to every element — the vectorized
+        equivalent of one ``advance_to`` per event. Returns the final
+        hour."""
+        h = np.asarray(hours, dtype=float)
+        if h.size == 0:
+            return self._now
+        if float(h[0]) < self._now - 1e-12 or \
+                (h.size > 1 and bool((np.diff(h) < 0).any())):
+            raise ValueError(
+                f"clock cannot run backwards: at {self._now}, asked for a "
+                "non-monotone event run — the calendar ordering invariant "
+                "broke")
+        self._now = max(self._now, float(h[-1]))
         return self._now

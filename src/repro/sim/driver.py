@@ -26,6 +26,15 @@ scoring, cluster billing, monitor billing) tracks simulated time — the
 property :meth:`CarbonEdgeEngine.run` cannot offer (it freezes the hour
 for the whole drain).
 
+Event queues (DESIGN.md §11): ``event_queue="calendar"`` (the default)
+runs the loop over the array-based :class:`EventCalendar` — same-kind
+event runs pop as numpy slices, client verdicts and metric records move
+in column batches, so driver overhead is O(batches).
+``event_queue="heap"`` keeps the original scalar loop over
+:class:`EventHeap`, retained as the bit-exact parity oracle: both modes
+produce byte-identical ``metrics.to_text()`` for the same scenario
+(``gate_sim_scale`` pins this in CI).
+
 Executors: anything with ``submit(task)`` and
 ``step(now_hour, limit) -> results`` — ``CarbonEdgeEngine`` natively, and
 ``runtime.serving.ServingEngine`` through its ``step`` alias. Results
@@ -42,9 +51,11 @@ from time import perf_counter
 from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
                     runtime_checkable)
 
+import numpy as np
+
 from repro.sim.arrivals import ArrivalProcess, ClosedLoopClientPool
 from repro.sim.clock import VirtualClock, hours_to_s, ms_to_hours, s_to_hours
-from repro.sim.events import EventHeap, EventKind
+from repro.sim.events import (KIND_CODE, EventCalendar, EventHeap, EventKind)
 from repro.sim.metrics import MetricsCollector, TaskRecord, TimelineSample
 
 
@@ -65,6 +76,88 @@ class _Pending:
     deferred_hours: float = 0.0
     tenant: str = ""
     client: Optional[int] = None     # closed-loop client id, if any
+
+
+class _PendFifo:
+    """The pending-submission FIFO in column form (DESIGN.md §11): one
+    list per :class:`_Pending` field plus a head cursor, so draining a
+    batch is a slice — not an O(queue) list copy per event batch, which
+    at 10^6 backlogged clients turned the driver quadratic. Used by both
+    queue modes; the scalar path materializes `_Pending` objects from the
+    columns on take, so its record loop is unchanged."""
+
+    __slots__ = ("_uid", "_sub", "_def", "_ten", "_cli", "_head")
+
+    def __init__(self):
+        self._uid: List[int] = []
+        self._sub: List[float] = []
+        self._def: List[float] = []
+        self._ten: List[str] = []
+        self._cli: List[int] = []    # -1 = not a closed-loop request
+        self._head = 0
+
+    def __len__(self) -> int:
+        return len(self._uid) - self._head
+
+    def __bool__(self) -> bool:
+        return len(self._uid) > self._head
+
+    def append(self, p: _Pending) -> None:
+        self._uid.append(p.uid)
+        self._sub.append(p.submit_hour)
+        self._def.append(p.deferred_hours)
+        self._ten.append(p.tenant)
+        self._cli.append(-1 if p.client is None else p.client)
+
+    def append_arrays(self, uids, submit_hours, tenants,
+                      client_ids=None) -> None:
+        self._uid.extend(uids.tolist())
+        self._sub.extend(submit_hours.tolist())
+        self._def.extend([0.0] * len(tenants))
+        self._ten.extend(tenants)
+        if client_ids is None:
+            self._cli.extend([-1] * len(tenants))
+        else:
+            self._cli.extend(client_ids.tolist())
+
+    def _compact(self) -> None:
+        h = self._head
+        if h > 1024 and h * 2 > len(self._uid):
+            del self._uid[:h], self._sub[:h], self._def[:h]
+            del self._ten[:h], self._cli[:h]
+            self._head = 0
+
+    def take_list(self, n: int) -> List[_Pending]:
+        """Drain the first ``n`` entries as `_Pending` objects (the
+        scalar record path)."""
+        a = self._head
+        z = min(a + n, len(self._uid))
+        self._head = z
+        out = [_Pending(u, s, d, t, None if c < 0 else c)
+               for u, s, d, t, c in zip(
+                   self._uid[a:z], self._sub[a:z], self._def[a:z],
+                   self._ten[a:z], self._cli[a:z])]
+        self._compact()
+        return out
+
+    def take_arrays(self, n: int):
+        """Drain the first ``n`` entries as columns:
+        ``(uids, submit_hours, deferred_hours, tenants, client_ids)``."""
+        a = self._head
+        z = min(a + n, len(self._uid))
+        self._head = z
+        out = (np.asarray(self._uid[a:z], dtype=np.int64),
+               np.asarray(self._sub[a:z], dtype=float),
+               np.asarray(self._def[a:z], dtype=float),
+               self._ten[a:z],
+               np.asarray(self._cli[a:z], dtype=np.int64))
+        self._compact()
+        return out
+
+
+_CR = KIND_CODE[EventKind.CLIENT_READY]
+_RT = KIND_CODE[EventKind.RETRY]
+_AR = KIND_CODE[EventKind.ARRIVAL]
 
 
 class AsyncEngineDriver:
@@ -88,10 +181,14 @@ class AsyncEngineDriver:
                  tick_hours: float = 0.0,
                  clients: Optional[ClosedLoopClientPool] = None,
                  risk_coverage: Optional[float] = None,
-                 obs=None, faults=None):
+                 obs=None, faults=None,
+                 event_queue: str = "calendar"):
         if arrivals is None and clients is None:
             raise ValueError("need an arrival process, a closed-loop "
                              "client pool, or both")
+        if event_queue not in ("calendar", "heap"):
+            raise ValueError("event_queue must be 'calendar' or 'heap', "
+                             f"got {event_queue!r}")
         self.executor = executor
         self.arrivals = arrivals
         self.task_factory = task_factory
@@ -130,13 +227,24 @@ class AsyncEngineDriver:
         # default) leaves the event loop byte-identical.
         self.faults = faults
         self.clock = VirtualClock(start_hour)
-        self.heap = EventHeap()
+        self._vectorized = event_queue == "calendar"
+        self.heap = EventCalendar() if self._vectorized else EventHeap()
         self.metrics = MetricsCollector(slo_latency_s=slo_latency_s)
-        self._pending: List[_Pending] = []   # FIFO, mirrors executor queue
+        self._pending = _PendFifo()          # FIFO, mirrors executor queue
         self._parked: List[tuple] = []       # budget-deferred (wake, _Pending)
-        self._flush_scheduled = False
+        # Earliest armed BATCH_READY hour, or None. Single-flush
+        # discipline: _schedule_flush pushes only when nothing is armed
+        # or the new flush fires strictly earlier (the superseded event
+        # then pops as a harmless extra drain). An unconditional push per
+        # fill-triggering enqueue looks equivalent but is quadratic under
+        # sustained saturation: every pop re-arms one flush, so the
+        # BATCH_READY population grows by one per enqueue and each
+        # 256-task drain drags the whole population of same-time events
+        # along with it (~10^9 pops at 10^6 closed-loop clients).
+        self._flush_at: Optional[float] = None
         self._busy_until = start_hour
         self._uid = 0
+        self.events_processed = 0
 
     # -- planning ------------------------------------------------------------
     def _plan(self, task, now: float) -> float:
@@ -176,16 +284,48 @@ class AsyncEngineDriver:
                                       getattr(task, "tenant", ""), client))
         if len(self._pending) >= self.max_batch:
             # Flush immediately, even past an already-scheduled window
-            # flush — the later event then drains whatever is pending (or
-            # nothing) and reschedules harmlessly.
-            self.heap.push(now, EventKind.BATCH_READY)
-            self._flush_scheduled = True
+            # flush — the superseded event then drains whatever is
+            # pending (or nothing) and reschedules harmlessly.
+            self._schedule_flush(now)
         else:
             self._schedule_flush(now + self.batch_window_hours)
 
+    def _enqueue_batch(self, tasks: List, uids: np.ndarray,
+                       times: np.ndarray,
+                       client_ids: Optional[np.ndarray]) -> None:
+        """Batched :meth:`_enqueue` over one same-kind event run
+        (nondecreasing ``times``). Replicates the scalar loop's flush
+        pushes exactly (DESIGN.md §11 windowing rule): the run's first
+        task would have scheduled the window flush, its last can trigger
+        at most one immediate flush — ``pop_run``'s limit guarantees the
+        batch never overshoots ``max_batch`` mid-run."""
+        hours = times.tolist()
+        if hasattr(tasks[0], "submitted_s"):
+            for task, h in zip(tasks, hours):
+                if task.submitted_s is None:
+                    task.submitted_s = hours_to_s(h)
+        submit_many = getattr(self.executor, "submit_many", None)
+        if submit_many is not None:
+            submit_many(tasks)
+        else:
+            for task in tasks:
+                self.executor.submit(task)
+        tenants = [getattr(task, "tenant", "") for task in tasks]
+        pend0 = len(self._pending)
+        self._pending.append_arrays(uids, times, tenants, client_ids)
+        k = len(tasks)
+        # window flush: armed while processing the run's first event
+        # (pend0 + 1 < max_batch is guaranteed by pop_run's room limit);
+        # intermediate enqueues would arm at later hours — no-ops under
+        # the strictly-earlier rule, so only the first is replayed here
+        self._schedule_flush(hours[0] + self.batch_window_hours)
+        # immediate flush: the run's last event filled the batch
+        if pend0 + k >= self.max_batch:
+            self._schedule_flush(hours[-1])
+
     def _schedule_flush(self, at_hour: float) -> None:
-        if not self._flush_scheduled:
-            self._flush_scheduled = True
+        if self._flush_at is None or at_hour < self._flush_at - 1e-12:
+            self._flush_at = at_hour
             self.heap.push(at_hour, EventKind.BATCH_READY)
 
     def _on_arrival(self, now: float) -> None:
@@ -201,6 +341,22 @@ class AsyncEngineDriver:
                            payload=(uid, task, now, wake - now))
         else:
             self._enqueue(uid, task, now, 0.0, now)
+
+    def _on_arrivals_batch(self, times: np.ndarray) -> None:
+        """A run of ARRIVAL events with nothing to plan against
+        (``_plan`` degenerates to ``now``): build and enqueue the tasks
+        in one batch."""
+        n = times.size
+        uids = np.arange(self._uid + 1, self._uid + n + 1, dtype=np.int64)
+        self._uid += n
+        factory = self.task_factory
+        if self.clients is None:
+            tasks = [factory(u, h)
+                     for u, h in zip(uids.tolist(), times.tolist())]
+        else:
+            tasks = [factory(u, h, "")
+                     for u, h in zip(uids.tolist(), times.tolist())]
+        self._enqueue_batch(tasks, uids, times, None)
 
     def _on_client_ready(self, client_id: int, now: float,
                          retry: bool = False) -> None:
@@ -220,6 +376,34 @@ class AsyncEngineDriver:
         tenant = self.clients.on_ready(client_id)
         task = self.task_factory(uid, now, tenant)
         self._enqueue(uid, task, now, 0.0, now, client=client_id)
+
+    def _on_clients_batch(self, times: np.ndarray, ids: np.ndarray,
+                          retry_mask: np.ndarray) -> None:
+        """Batched :meth:`_on_client_ready` over a CLIENT_READY/RETRY
+        run. ``times`` is nondecreasing, so past-horizon drops are a
+        suffix: retries there count as abandoned (same bookkeeping as the
+        scalar path), first tries vanish silently."""
+        pool = self.clients
+        live = int(np.searchsorted(times,
+                                   self.start_hour + self.horizon_hours,
+                                   side="left"))
+        if live < times.size:
+            for cid in ids[live:][retry_mask[live:]].tolist():
+                self.metrics.count_abandoned(pool.tenant_of(cid))
+                pool.give_up(cid)
+        if live == 0:
+            return
+        times, ids = times[:live], ids[:live]
+        uids = np.arange(self._uid + 1, self._uid + live + 1,
+                         dtype=np.int64)
+        self._uid += live
+        tcodes = pool.on_ready_batch(ids)
+        tnames = pool.tenant_names
+        factory = self.task_factory
+        tasks = [factory(u, h, tnames[c])
+                 for u, h, c in zip(uids.tolist(), times.tolist(),
+                                    tcodes.tolist())]
+        self._enqueue_batch(tasks, uids, times, ids)
 
     def _client_verdict(self, client_id: int, verdict: str,
                         at_hour: float, tenant: str) -> None:
@@ -267,8 +451,7 @@ class AsyncEngineDriver:
             p.deferred_hours += now - parked_at
             self._pending.append(p)
         if len(self._pending) >= self.max_batch:
-            self.heap.push(now, EventKind.BATCH_READY)
-            self._flush_scheduled = True
+            self._schedule_flush(now)
         else:
             self._schedule_flush(now + self.batch_window_hours)
 
@@ -300,8 +483,7 @@ class AsyncEngineDriver:
         """
         if outcomes is None:
             outcomes = [("done", r) for r in results]
-        done, free = self._pending[:len(outcomes)], exec_hour
-        self._pending = self._pending[len(outcomes):]
+        done, free = self._pending.take_list(len(outcomes)), exec_hour
         pool = self.clients
         t = exec_hour
         for p, (kind, val) in zip(done, outcomes):
@@ -351,8 +533,61 @@ class AsyncEngineDriver:
                 self._client_verdict(p.client, verdict, at, p.tenant)
         return free
 
+    def _record_batch_vec(self, results: Sequence,
+                          exec_hour: float) -> float:
+        """Columnar :meth:`_record_batch` for the all-completed serial
+        case (DESIGN.md §11): gathers the step's per-task arrays (the
+        engine's ``last_exec`` snapshot when available — the same floats
+        its result objects carry — else one fromiter pass), folds finish
+        hours with the scalar loop's exact left-to-right accumulation,
+        records one ``add_batch``, and feeds every closed-loop client its
+        verdict through one ``on_complete_batch``."""
+        n = len(results)
+        uids, subs, defs, tenants, clis = self._pending.take_arrays(n)
+        metrics = self.metrics
+        snap = getattr(self.executor, "last_exec", None)
+        if snap is not None and len(snap[2]) == n:
+            uniq, inverse, lat_ms, e_kwh, c_g = snap
+            node_codes = metrics.intern_array(uniq)[inverse]
+        else:
+            lat_ms = np.fromiter((r.latency_ms for r in results), float, n)
+            e_kwh = np.fromiter((r.energy_kwh for r in results), float, n)
+            c_g = np.fromiter((getattr(r, "carbon_g", 0.0)
+                               for r in results), float, n)
+            node_codes = np.fromiter(
+                (metrics.intern(getattr(r, "node", getattr(r, "pod", "")))
+                 for r in results), np.int64, n)
+        # serial finish hours: exactly the scalar `t += ms_to_hours(lat)`
+        # fold (np.add.accumulate is sequential, so bit-identical)
+        acc = np.add.accumulate(
+            np.concatenate(([exec_hour], lat_ms / 3.6e6)))
+        finishes = acc[1:]
+        tenant_codes = np.fromiter((metrics.intern(t) for t in tenants),
+                                   np.int64, n)
+        metrics.add_batch(uids, subs, exec_hour, finishes, node_codes,
+                          c_g, e_kwh, defs, tenant_codes)
+        pool = self.clients
+        if pool is not None:
+            pos = np.flatnonzero(clis >= 0)
+            if pos.size:
+                ids = clis[pos]
+                fin = finishes[pos]
+                lat_s = (fin - subs[pos]) * 3600.0
+                retry, abandon, next_h = pool.on_complete_batch(
+                    ids, lat_s, fin)
+                for j in np.flatnonzero(retry).tolist():
+                    metrics.count_retry(tenants[pos[j]])
+                for j in np.flatnonzero(abandon).tolist():
+                    metrics.count_abandoned(tenants[pos[j]])
+                kinds = np.where(retry, _RT, _CR)
+                self.heap.push_batch(next_h, kinds, ids)
+        return float(acc[-1])
+
     def _on_batch_ready(self, now: float) -> None:
-        self._flush_scheduled = False
+        if self._flush_at is not None and now >= self._flush_at - 1e-12:
+            self._flush_at = None           # the armed flush fired (or we
+        # popped a same-time superseded one — the armed event then drains
+        # nothing and falls through the re-arm below, which is harmless)
         if not self._pending:
             return
         if now < self._busy_until - 1e-12:        # executor still serving
@@ -370,10 +605,20 @@ class AsyncEngineDriver:
                    if monitor is not None else None)
         outcomes = getattr(self.executor, "last_outcomes", None)
         t0 = perf_counter() if prof is not None else 0.0
-        self._busy_until = self._record_batch(results, now, e_batch, outcomes)
+        if (self._vectorized and outcomes is None and results
+                and hasattr(results[0], "latency_ms")
+                and getattr(results[0], "energy_kwh", None) is not None):
+            self._busy_until = self._record_batch_vec(results, now)
+        else:
+            self._busy_until = self._record_batch(results, now, e_batch,
+                                                  outcomes)
         if prof is not None:
             prof.add("sim_record", perf_counter() - t0)
-        if self._pending:
+        if len(self._pending) >= self.max_batch:
+            # saturated: drain back-to-back the moment the executor frees
+            # up instead of idling a whole window on a full batch
+            self._schedule_flush(max(self._busy_until, now))
+        elif self._pending:
             self._schedule_flush(max(self._busy_until,
                                      now + self.batch_window_hours))
 
@@ -382,8 +627,6 @@ class AsyncEngineDriver:
         provider = getattr(self.executor, "provider", None)
         mean_int = 0.0
         if cluster is not None and provider is not None:
-            import numpy as np
-
             from repro.core.api import intensity_batch
 
             names = list(cluster.nodes)
@@ -406,12 +649,97 @@ class AsyncEngineDriver:
                     mean_int = float(sum(vals) / len(vals))
         monitor = self._monitor()
         carbon = monitor.total_carbon_g() if monitor is not None else \
-            sum(r.carbon_g for r in self.metrics.records)
+            self.metrics.carbon_g_total()
         self.metrics.add_sample(TimelineSample(
-            hour=now, completed=len(self.metrics.records),
+            hour=now, completed=self.metrics.n_records,
             carbon_g_cum=float(carbon), mean_intensity=mean_int))
 
     # -- main loop -----------------------------------------------------------
+    def _dispatch(self, ev, now: float) -> None:
+        """Scalar dispatch of one popped event (both queue modes)."""
+        if ev.kind is EventKind.ARRIVAL:
+            self._on_arrival(now)
+        elif (ev.kind is EventKind.CLIENT_READY
+              or ev.kind is EventKind.RETRY):
+            self._on_client_ready(ev.payload, now,
+                                  retry=ev.kind is EventKind.RETRY)
+        elif ev.kind is EventKind.DEFER_WAKE:
+            if ev.payload is None:            # budget-deferred wake
+                self._on_tenancy_wake(now)
+            else:                             # forecast-planned wake
+                uid, task, submit_hour, deferred = ev.payload
+                self._enqueue(uid, task, submit_hour, deferred, now)
+        elif ev.kind is EventKind.BATCH_READY:
+            self._on_batch_ready(now)
+        elif ev.kind is EventKind.INTENSITY_TICK:
+            self._on_tick(now)
+        elif (ev.kind is EventKind.NODE_DOWN
+              or ev.kind is EventKind.NODE_UP
+              or ev.kind is EventKind.PROVIDER_OUTAGE):
+            self.faults.apply(ev.payload, self.executor)
+
+    def _run_loop_calendar(self, ev_counts: Optional[Dict[str, int]]) -> None:
+        """The O(batches) event loop (DESIGN.md §11): a same-kind run of
+        CLIENT_READY/RETRY (or plan-free ARRIVAL) events pops as one
+        numpy slice, bounded by the windowing rule — up to the batch-size
+        room so at most the run's last event triggers an immediate flush,
+        and (when no flush is scheduled yet) up to the window the run's
+        first event would have opened. Everything else dispatches
+        scalar, so fault/defer/tick semantics are untouched."""
+        q = self.heap
+        clock = self.clock
+        pool = self.clients
+        arrivals_plain = (self.forecast is None
+                          or getattr(self.executor, "cluster", None) is None)
+        while True:
+            key = q.peek_key()
+            if key is None:
+                break
+            t0k, code = key
+            batchable = ((code == _CR or code == _RT)
+                         if pool is not None else False)
+            if not batchable and code == _AR and arrivals_plain:
+                batchable = True
+            room = self.max_batch - len(self._pending)
+            if room <= 1:
+                # saturated: a one-element array run costs more than the
+                # scalar path, which processes the same single event with
+                # identical semantics (no RNG is drawn before the flush)
+                batchable = False
+            if batchable:
+                limit = room
+                # an already-armed flush is a physical BATCH_READY event
+                # in the queue, so the same-kind run stops at it for
+                # free; the cap covers the one flush the run's FIRST
+                # enqueue may arm (strictly-earlier rule) that the queue
+                # cannot know about yet
+                max_t = t0k + self.batch_window_hours
+                codes = (_CR, _RT) if code != _AR else (_AR,)
+                times, payloads, kinds = q.pop_run(codes, limit, max_t)
+                clock.advance_run(times)
+                self.events_processed += times.size
+                if ev_counts is not None:
+                    nr = int(np.count_nonzero(kinds == _RT))
+                    nc = times.size - nr
+                    name = ("ARRIVAL" if code == _AR
+                            else EventKind.CLIENT_READY.name)
+                    if nc:
+                        ev_counts[name] = ev_counts.get(name, 0) + nc
+                    if nr:
+                        ev_counts["RETRY"] = ev_counts.get("RETRY", 0) + nr
+                if code == _AR:
+                    self._on_arrivals_batch(times)
+                else:
+                    self._on_clients_batch(times, payloads, kinds == _RT)
+            else:
+                ev = q.pop()
+                now = clock.advance_to(ev.time_hours)
+                self.events_processed += 1
+                if ev_counts is not None:
+                    k = ev.kind.name
+                    ev_counts[k] = ev_counts.get(k, 0) + 1
+                self._dispatch(ev, now)
+
     def run(self) -> MetricsCollector:
         if self.faults is not None:
             # pushed before arrivals so a fault and an arrival at the same
@@ -419,11 +747,21 @@ class AsyncEngineDriver:
             for f in self.faults.schedule:
                 self.heap.push(float(f.hour), f.event_kind, payload=f)
         if self.arrivals is not None:
-            for t in self.arrivals.times(self.start_hour, self.horizon_hours):
-                self.heap.push(float(t), EventKind.ARRIVAL)
+            ts = self.arrivals.times(self.start_hour, self.horizon_hours)
+            if self._vectorized:
+                self.heap.push_batch(np.asarray(ts, dtype=float),
+                                     EventKind.ARRIVAL)
+            else:
+                for t in ts:
+                    self.heap.push(float(t), EventKind.ARRIVAL)
         if self.clients is not None:
-            for at, cid in self.clients.initial_events(self.start_hour):
-                self.heap.push(at, EventKind.CLIENT_READY, payload=cid)
+            if self._vectorized:
+                ats, cids = self.clients.initial_events_arrays(
+                    self.start_hour)
+                self.heap.push_batch(ats, EventKind.CLIENT_READY, cids)
+            else:
+                for at, cid in self.clients.initial_events(self.start_hour):
+                    self.heap.push(at, EventKind.CLIENT_READY, payload=cid)
             # advertise per-tenant SLO classes to the metrics layer
             for pop in self.clients.populations:
                 if pop.slo_latency_s != float("inf"):
@@ -452,32 +790,17 @@ class AsyncEngineDriver:
         ev_counts: Optional[Dict[str, int]] = (
             {} if self.obs is not None and self.obs.metrics is not None
             else None)
-        while self.heap:
-            ev = self.heap.pop()
-            now = self.clock.advance_to(ev.time_hours)
-            if ev_counts is not None:
-                k = ev.kind.name
-                ev_counts[k] = ev_counts.get(k, 0) + 1
-            if ev.kind is EventKind.ARRIVAL:
-                self._on_arrival(now)
-            elif (ev.kind is EventKind.CLIENT_READY
-                  or ev.kind is EventKind.RETRY):
-                self._on_client_ready(ev.payload, now,
-                                      retry=ev.kind is EventKind.RETRY)
-            elif ev.kind is EventKind.DEFER_WAKE:
-                if ev.payload is None:            # budget-deferred wake
-                    self._on_tenancy_wake(now)
-                else:                             # forecast-planned wake
-                    uid, task, submit_hour, deferred = ev.payload
-                    self._enqueue(uid, task, submit_hour, deferred, now)
-            elif ev.kind is EventKind.BATCH_READY:
-                self._on_batch_ready(now)
-            elif ev.kind is EventKind.INTENSITY_TICK:
-                self._on_tick(now)
-            elif (ev.kind is EventKind.NODE_DOWN
-                  or ev.kind is EventKind.NODE_UP
-                  or ev.kind is EventKind.PROVIDER_OUTAGE):
-                self.faults.apply(ev.payload, self.executor)
+        if self._vectorized:
+            self._run_loop_calendar(ev_counts)
+        else:
+            while self.heap:
+                ev = self.heap.pop()
+                now = self.clock.advance_to(ev.time_hours)
+                self.events_processed += 1
+                if ev_counts is not None:
+                    k = ev.kind.name
+                    ev_counts[k] = ev_counts.get(k, 0) + 1
+                self._dispatch(ev, now)
         assert not self._pending, "event loop ended with tasks still queued"
         if ev_counts is not None:
             fam = self.obs.metrics.counter(

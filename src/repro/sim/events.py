@@ -1,4 +1,4 @@
-"""Event model for the discrete-event simulator (DESIGN.md §2).
+"""Event model for the discrete-event simulator (DESIGN.md §2, §11).
 
 Nine event kinds drive the serving loop:
 
@@ -24,17 +24,42 @@ Nine event kinds drive the serving loop:
   last-known-good degraded mode).
 
 Determinism contract: events are totally ordered by
-``(time_hours, seq)`` where ``seq`` is a per-heap monotonic counter
+``(time_hours, seq)`` where ``seq`` is a per-queue monotonic counter
 assigned at push time. Two events at the same simulated instant therefore
 pop in *insertion* order — no hash ordering, no RNG, no wall clock — so a
 run is a pure function of (arrival process seed, scenario parameters).
+
+Two queue implementations honour that contract:
+
+- :class:`EventHeap` — the original scalar ``heapq``: one Python
+  comparison-driven pop per event. Retained as the bit-exact parity
+  oracle (the same role the scalar scheduler plays for the vectorized
+  policy, DESIGN.md §1).
+- :class:`EventCalendar` — an array-based calendar queue (DESIGN.md §11):
+  events live in time-bucketed column arrays ``(time, seq, kind,
+  payload)``; each bucket is lazily ``np.lexsort``-ed by ``(time, seq)``
+  when the drain reaches it, pops advance a cursor, and
+  :meth:`EventCalendar.pop_run` hands the driver a whole same-kind run of
+  events in one numpy slice — the O(batches) event loop.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class SimExhausted(IndexError):
+    """``pop()`` on an empty event queue.
+
+    Subclasses :class:`IndexError` (what ``heapq.heappop`` used to leak)
+    so pre-existing callers that caught the bare built-in keep working,
+    while the message now says *what* ran dry instead of pointing at a
+    heapq internal.
+    """
 
 
 class EventKind(Enum):
@@ -47,6 +72,17 @@ class EventKind(Enum):
     NODE_DOWN = "node_down"
     NODE_UP = "node_up"
     PROVIDER_OUTAGE = "provider_outage"
+
+
+# Stable integer codes for the calendar's kind column. Enum definition
+# order is part of the public layout (DESIGN.md §11).
+KIND_LIST: Tuple[EventKind, ...] = tuple(EventKind)
+KIND_CODE: Dict[EventKind, int] = {k: i for i, k in enumerate(KIND_LIST)}
+# Kinds whose payload is a small int (a client id): the calendar stores
+# the value directly in the payload column — the id doubles as the index
+# into the client pool's state columns, so no per-event object exists.
+_INT_PAYLOAD_CODES = frozenset((KIND_CODE[EventKind.CLIENT_READY],
+                                KIND_CODE[EventKind.RETRY]))
 
 
 @dataclass(frozen=True, order=True)
@@ -72,6 +108,9 @@ class EventHeap:
         return ev
 
     def pop(self) -> Event:
+        if not self._heap:
+            raise SimExhausted("pop from an empty EventHeap — the event "
+                               "loop drained every scheduled event")
         return heapq.heappop(self._heap)
 
     def peek(self) -> Optional[Event]:
@@ -82,3 +121,435 @@ class EventHeap:
 
     def __bool__(self) -> bool:
         return bool(self._heap)
+
+
+class _Bucket:
+    """One calendar bucket: sorted column arrays + a cursor, plus two
+    overlays for events pushed after the bucket was built:
+
+    - ``chunks`` — batch pushes (array quads). Folded into the sorted
+      columns (one ``np.lexsort`` over the *remaining* rows) the next
+      time the bucket is read; batch pushes rarely target the current
+      bucket (client verdicts land think/backoff hours ahead), so the
+      fold is amortized.
+    - ``ph`` — scalar pushes, kept as a ``heapq`` of ``(time, seq, kind,
+      payload)`` tuples and *served in place*: reads compare the heap
+      front against the array cursor and take the smaller key, so the
+      saturated regime (one immediate BATCH_READY push per drained
+      batch, straight into the current bucket) costs O(log overlay) per
+      event instead of re-sorting the bucket remainder on every
+      push/pop cycle.
+    """
+
+    __slots__ = ("t", "s", "k", "p", "i", "ph", "pl", "chunks")
+
+    def __init__(self):
+        self.t = _EMPTY_F
+        self.s = _EMPTY_I
+        self.k = _EMPTY_I
+        self.p = _EMPTY_I
+        self.i = 0
+        self.ph: List[tuple] = []      # scalar-push overlay (heapq)
+        self.pl: List[tuple] = []      # small batch-push spill (tuples)
+        self.chunks: List[tuple] = []  # batch-push overlay (array quads)
+
+    def remaining(self) -> int:
+        n = (self.t.size - self.i) + len(self.ph) + len(self.pl)
+        for c in self.chunks:
+            n += c[0].size
+        return n
+
+    def fold_chunks(self) -> None:
+        """Fold the batch-push overlay into the sorted remainder.
+
+        Every overlay event carries a seq strictly greater than every
+        stored row's (seq is globally monotonic and the stored rows were
+        all pushed before the fold that built them), so a stable
+        time-keyed ``searchsorted(side="right")`` insert restores the
+        exact global ``(time, seq)`` order — one O(remaining) memcpy
+        instead of a lexsort over the whole bucket remainder."""
+        if not self.chunks and not self.pl:
+            return
+        ts: List[np.ndarray] = []
+        ss: List[np.ndarray] = []
+        ks: List[np.ndarray] = []
+        ps: List[np.ndarray] = []
+        if self.pl:
+            a, b, c, d = zip(*self.pl)
+            self.pl = []
+            ts.append(np.asarray(a, dtype=np.float64))
+            ss.append(np.asarray(b, dtype=np.int64))
+            ks.append(np.asarray(c, dtype=np.int64))
+            ps.append(np.asarray(d, dtype=np.int64))
+        for ct, cs, ck, cp in self.chunks:
+            ts.append(ct)
+            ss.append(cs)
+            ks.append(ck)
+            ps.append(cp)
+        self.chunks = []
+        if len(ts) == 1:
+            t, s, k, p = ts[0], ss[0], ks[0], ps[0]
+        else:
+            t = np.concatenate(ts)
+            s = np.concatenate(ss)
+            k = np.concatenate(ks)
+            p = np.concatenate(ps)
+        order = np.lexsort((s, t))
+        t, s, k, p = t[order], s[order], k[order], p[order]
+        i = self.i
+        if i >= self.t.size:
+            self.t, self.s, self.k, self.p = t, s, k, p
+            self.i = 0
+            return
+        pos = np.searchsorted(self.t[i:], t, side="right")
+        self.t = np.insert(self.t[i:], pos, t)
+        self.s = np.insert(self.s[i:], pos, s)
+        self.k = np.insert(self.k[i:], pos, k)
+        self.p = np.insert(self.p[i:], pos, p)
+        self.i = 0
+
+    def heap_first(self) -> bool:
+        """True when the scalar overlay holds the bucket's next event."""
+        if not self.ph:
+            return False
+        if self.i >= self.t.size:
+            return True
+        ot, os_ = self.ph[0][0], self.ph[0][1]
+        at = float(self.t[self.i])
+        return ot < at or (ot == at and os_ < int(self.s[self.i]))
+
+    def array_cut(self, end: int) -> int:
+        """First array index in ``[i, end)`` whose ``(time, seq)`` key is
+        past the scalar overlay's front — the sorted prefix that may be
+        served before the overlay interleaves."""
+        if not self.ph:
+            return end
+        kt, ks = self.ph[0][0], self.ph[0][1]
+        i = self.i
+        lo = i + int(np.searchsorted(self.t[i:end], kt, side="left"))
+        hi = i + int(np.searchsorted(self.t[i:end], kt, side="right"))
+        if lo < hi:
+            lo += int(np.searchsorted(self.s[lo:hi], ks, side="left"))
+        return lo
+
+
+_EMPTY_F = np.empty(0, dtype=np.float64)
+_EMPTY_I = np.empty(0, dtype=np.int64)
+
+
+class EventCalendar:
+    """Array-based event calendar (DESIGN.md §11) — same ``(time, seq)``
+    total order as :class:`EventHeap`, O(batches) access.
+
+    Layout: events are four parallel columns ``(time f64, seq i64, kind
+    i64 code, payload i64)`` split into fixed-width time buckets. Buckets
+    fill as append-only chunks and are ``np.lexsort``-ed once when the
+    drain reaches them; a cursor then serves pops in order. Scalar
+    pushes into the *current* bucket (immediate flushes, short retries)
+    land in a per-bucket heap overlay that reads interleave with the
+    sorted columns on the fly — O(log overlay) per event, no re-sort.
+    Exhausted buckets are freed, so live memory tracks the future-event
+    population, not the replay length.
+
+    Payload column: ``-1`` = no payload; for ``CLIENT_READY`` / ``RETRY``
+    the value is the client id itself (the index into the pool's state
+    columns); for every other kind it indexes a per-kind Python object
+    store (fault objects, parked-task tuples).
+
+    The bucket width is chosen at first read so the initial load averages
+    ``target_bucket_events`` per bucket; later pushes land in O(1). The
+    default target balances merge cost (lexsort over a bucket's remaining
+    rows on every overlay fold) against push fan-out (batch pushes split
+    into one chunk per touched bucket) — benchmarks/sim_scale.py sweeps
+    it; output is invariant to it by construction.
+    """
+
+    def __init__(self, target_bucket_events: int = 512):
+        self._target = max(1, int(target_bucket_events))
+        self._seq = 0
+        self._n = 0
+        self._active = False
+        self._stage: List[tuple] = []      # pre-activation chunks
+        self._t0 = 0.0
+        self._width = 1.0
+        self._buckets: Dict[int, _Bucket] = {}
+        self._bq: List[int] = []           # min-heap of bucket indices
+        self._cur: Optional[_Bucket] = None
+        self._cur_idx = 0
+        self._obj: Dict[int, List[Any]] = {}
+
+    # -- push ---------------------------------------------------------------
+    def _pidx(self, code: int, payload: Any) -> int:
+        if payload is None:
+            return -1
+        if code in _INT_PAYLOAD_CODES:
+            return int(payload)
+        store = self._obj.setdefault(code, [])
+        store.append(payload)
+        return len(store) - 1
+
+    def push(self, time_hours: float, kind: EventKind,
+             payload: Any = None) -> None:
+        code = KIND_CODE[kind]
+        t = float(time_hours)
+        seq = self._seq
+        self._seq += 1
+        self._n += 1
+        p = self._pidx(code, payload)
+        if not self._active:
+            one = (np.array([t]), np.array([seq], dtype=np.int64),
+                   np.array([code], dtype=np.int64),
+                   np.array([p], dtype=np.int64))
+            self._stage.append(one)
+            return
+        b = self._bucket_for(t)
+        heapq.heappush(b.ph, (t, seq, code, p))
+
+    def push_batch(self, times: np.ndarray, kind, payloads=None) -> None:
+        """Push ``len(times)`` events in one call, assigning the same
+        consecutive seq numbers a scalar push loop would. ``kind`` is one
+        :class:`EventKind` or an int-code array (mixed-kind runs, e.g.
+        interleaved CLIENT_READY/RETRY schedules); ``payloads`` is None
+        or an int array (client ids)."""
+        t = np.ascontiguousarray(times, dtype=np.float64)
+        n = t.size
+        if n == 0:
+            return
+        s = np.arange(self._seq, self._seq + n, dtype=np.int64)
+        self._seq += n
+        self._n += n
+        if isinstance(kind, EventKind):
+            k = np.full(n, KIND_CODE[kind], dtype=np.int64)
+        else:
+            k = np.ascontiguousarray(kind, dtype=np.int64)
+        if payloads is None:
+            p = np.full(n, -1, dtype=np.int64)
+        else:
+            p = np.ascontiguousarray(payloads, dtype=np.int64)
+        if not self._active:
+            self._stage.append((t, s, k, p))
+            return
+        idx = self._indices_for(t)
+        if idx.size == 1 or (idx[0] == idx).all():
+            self._bucket_at(int(idx[0])).chunks.append((t, s, k, p))
+            return
+        if n <= 128:
+            # small scatter (client verdicts fanning out over think
+            # times): a tuple loop into per-bucket spill lists beats the
+            # argsort/split machinery below, which pays ~one chunk per
+            # touched bucket
+            tl = t.tolist()
+            sl = s.tolist()
+            kl = k.tolist()
+            pl = p.tolist()
+            for j, bi in enumerate(idx.tolist()):
+                self._bucket_at(bi).pl.append((tl[j], sl[j], kl[j], pl[j]))
+            return
+        order = np.argsort(idx, kind="stable")
+        idx_sorted = idx[order]
+        t, s, k, p = t[order], s[order], k[order], p[order]
+        cuts = np.flatnonzero(np.diff(idx_sorted)) + 1
+        starts = np.concatenate(([0], cuts))
+        ends = np.concatenate((cuts, [n]))
+        for a, z in zip(starts.tolist(), ends.tolist()):
+            self._bucket_at(int(idx_sorted[a])).chunks.append(
+                (t[a:z], s[a:z], k[a:z], p[a:z]))
+
+    def _indices_for(self, t: np.ndarray) -> np.ndarray:
+        idx = np.floor((t - self._t0) / self._width).astype(np.int64)
+        # Never file behind the drain: an index at-or-before the current
+        # bucket merges into it (its (time, seq) key still sorts first).
+        return np.maximum(idx, self._cur_idx)
+
+    def _bucket_for(self, t: float) -> _Bucket:
+        i = int((t - self._t0) / self._width)
+        if i < self._cur_idx:
+            i = self._cur_idx
+        return self._bucket_at(i)
+
+    def _bucket_at(self, i: int) -> _Bucket:
+        b = self._buckets.get(i)
+        if b is None:
+            b = _Bucket()
+            self._buckets[i] = b
+            heapq.heappush(self._bq, i)
+        return b
+
+    # -- activation ---------------------------------------------------------
+    def _activate(self) -> None:
+        """First read: derive the bucket width from the staged bulk load
+        and distribute it. Until now every push was O(1) staging."""
+        self._active = True
+        if not self._stage:
+            return
+        t = np.concatenate([c[0] for c in self._stage])
+        s = np.concatenate([c[1] for c in self._stage])
+        k = np.concatenate([c[2] for c in self._stage])
+        p = np.concatenate([c[3] for c in self._stage])
+        self._stage = []
+        self._t0 = float(t.min())
+        span = float(t.max()) - self._t0
+        n_buckets = max(1, min(t.size // self._target, 1 << 20))
+        self._width = (span / n_buckets) if span > 0 and n_buckets > 1 else \
+            max(span, 1.0)
+        self._cur_idx = 0
+        idx = np.floor((t - self._t0) / self._width).astype(np.int64)
+        order = np.argsort(idx, kind="stable")
+        idx = idx[order]
+        t, s, k, p = t[order], s[order], k[order], p[order]
+        cuts = np.flatnonzero(np.diff(idx)) + 1
+        starts = np.concatenate(([0], cuts))
+        ends = np.concatenate((cuts, [t.size]))
+        for a, z in zip(starts.tolist(), ends.tolist()):
+            self._bucket_at(int(idx[a])).chunks.append(
+                (t[a:z], s[a:z], k[a:z], p[a:z]))
+
+    # -- drain --------------------------------------------------------------
+    def _front(self) -> Optional[_Bucket]:
+        """The bucket holding the globally-next event, batch overlay
+        folded in and cursor/scalar-overlay valid — or None when the
+        calendar is empty."""
+        if not self._active:
+            self._activate()
+        while True:
+            b = self._cur
+            if b is not None:
+                b.fold_chunks()
+                if b.i < b.t.size or b.ph:
+                    return b
+                del self._buckets[self._cur_idx]
+                self._cur = None
+            if not self._bq:
+                return None
+            i = heapq.heappop(self._bq)
+            b = self._buckets.get(i)
+            if b is None or (b.i >= b.t.size and not b.ph and not b.chunks
+                             and not b.pl):
+                continue      # stale heap entry (freed / already drained)
+            self._cur = b
+            self._cur_idx = i
+
+    def _resolve(self, code: int, p: int) -> Any:
+        if p < 0:
+            return None
+        if code in _INT_PAYLOAD_CODES:
+            return p
+        return self._obj[code][p]
+
+    def pop(self) -> Event:
+        b = self._front()
+        if b is None:
+            raise SimExhausted("pop from an empty EventCalendar — the "
+                               "event loop drained every scheduled event")
+        self._n -= 1
+        if b.heap_first():
+            t, s, code, p = heapq.heappop(b.ph)
+            return Event(t, s, KIND_LIST[code], self._resolve(code, p))
+        i = b.i
+        b.i = i + 1
+        code = int(b.k[i])
+        return Event(float(b.t[i]), int(b.s[i]), KIND_LIST[code],
+                     self._resolve(code, int(b.p[i])))
+
+    def peek(self) -> Optional[Event]:
+        b = self._front()
+        if b is None:
+            return None
+        if b.heap_first():
+            t, s, code, p = b.ph[0]
+            return Event(t, s, KIND_LIST[code], self._resolve(code, p))
+        i = b.i
+        code = int(b.k[i])
+        return Event(float(b.t[i]), int(b.s[i]), KIND_LIST[code],
+                     self._resolve(code, int(b.p[i])))
+
+    def peek_key(self) -> Optional[Tuple[float, int]]:
+        """(time_hours, kind_code) of the next event without building an
+        :class:`Event` — the driver's dispatch probe."""
+        b = self._front()
+        if b is None:
+            return None
+        if b.heap_first():
+            return b.ph[0][0], b.ph[0][2]
+        return float(b.t[b.i]), int(b.k[b.i])
+
+    def pop_run(self, codes: Sequence[int], max_n: int,
+                max_time: float = np.inf):
+        """Pop the maximal prefix of events whose kind code is in
+        ``codes``, up to ``max_n`` events with ``time <= max_time`` —
+        the batched-dispatch primitive (DESIGN.md §11 windowing rule).
+        Returns ``(times, payload_ints, kind_codes)`` in global
+        ``(time, seq)`` order; empty arrays when the next event doesn't
+        qualify."""
+        seg_t: List[np.ndarray] = []
+        seg_p: List[np.ndarray] = []
+        seg_k: List[np.ndarray] = []
+        buf_t: List[float] = []        # scalar-overlay events, in order
+        buf_p: List[int] = []
+        buf_k: List[int] = []
+
+        def flush_buf() -> None:
+            if buf_t:
+                seg_t.append(np.asarray(buf_t, dtype=np.float64))
+                seg_p.append(np.asarray(buf_p, dtype=np.int64))
+                seg_k.append(np.asarray(buf_k, dtype=np.int64))
+                del buf_t[:], buf_p[:], buf_k[:]
+
+        left = int(max_n)
+        stop = False
+        while left > 0 and not stop:
+            b = self._front()
+            if b is None:
+                break
+            while left > 0:
+                if b.heap_first():
+                    ot, _, oc, op = b.ph[0]
+                    if oc not in codes or not ot <= max_time:
+                        stop = True         # next event doesn't qualify
+                        break
+                    heapq.heappop(b.ph)
+                    buf_t.append(ot)
+                    buf_p.append(op)
+                    buf_k.append(oc)
+                    self._n -= 1
+                    left -= 1
+                    continue
+                i = b.i
+                if i >= b.t.size:
+                    break                   # bucket drained -> next bucket
+                end = b.array_cut(b.t.size)
+                ks = b.k[i:end]
+                ok = ks == codes[0]
+                for c in codes[1:]:
+                    ok |= ks == c
+                if max_time != np.inf:
+                    ok &= b.t[i:end] <= max_time
+                bad = np.flatnonzero(~ok)
+                run = int(bad[0]) if bad.size else ok.size
+                take = min(run, left)
+                if take:
+                    flush_buf()
+                    seg_t.append(b.t[i:i + take])
+                    seg_p.append(b.p[i:i + take])
+                    seg_k.append(ks[:take])
+                    b.i = i + take
+                    self._n -= take
+                    left -= take
+                if take < run:
+                    break                   # max_n reached
+                if bad.size:
+                    stop = True             # kind change or past the window
+                    break
+        flush_buf()
+        if not seg_t:
+            return _EMPTY_F, _EMPTY_I, _EMPTY_I
+        if len(seg_t) == 1:
+            return seg_t[0], seg_p[0], seg_k[0]
+        return (np.concatenate(seg_t), np.concatenate(seg_p),
+                np.concatenate(seg_k))
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __bool__(self) -> bool:
+        return self._n > 0

@@ -1,14 +1,24 @@
 """Queueing / SLO / carbon metrics for the serving simulator (DESIGN.md §2).
 
-The driver appends one :class:`TaskRecord` per completed task and one
-timeline sample per ``INTENSITY_TICK``; :class:`MetricsCollector.summary`
-reduces them to the report the benchmarks and CI smoke assert on:
-per-task queueing delay, p50/p95/p99 end-to-end latency, SLO-violation
-rate, deferral counts, and the carbon-vs-latency timeline.
+The driver appends one :class:`TaskRecord` per completed task (or, on the
+calendar fast path, one column batch per drained engine step — DESIGN.md
+§11) and one timeline sample per ``INTENSITY_TICK``;
+:class:`MetricsCollector.summary` reduces them to the report the
+benchmarks and CI smoke assert on: per-task queueing delay, p50/p95/p99
+end-to-end latency, SLO-violation rate, deferral counts, and the
+carbon-vs-latency timeline.
+
+Storage is columnar: records live in parallel numpy arrays (uid, submit,
+start, finish, node code, carbon, energy, deferred, tenant code) with
+node/tenant names interned once, so a 10^7-task replay costs array
+appends rather than 10^7 ``TaskRecord`` objects. The ``records`` property
+materializes the familiar object view on demand for callers that want it.
 
 Determinism contract: :meth:`MetricsCollector.to_text` renders every float
 through one fixed ``%.9g`` format, so two same-seed runs produce
-byte-identical reports (regression-tested).
+byte-identical reports (regression-tested). All totals reduce through
+``np.add.accumulate``'s sequential fold — bit-identical to the Python
+``sum()`` loops they replaced (pairwise ``np.sum`` would not be).
 """
 from __future__ import annotations
 
@@ -62,10 +72,20 @@ def _pct(xs: np.ndarray, q: float) -> float:
     return float(np.percentile(xs, q)) if xs.size else 0.0
 
 
+def _seq_sum(x: np.ndarray) -> float:
+    """Strict left-fold sum: bit-identical to ``0.0 + x0 + x1 + ...``
+    (``np.add.accumulate`` is sequential; ``np.sum`` is pairwise and
+    would change the ninth significant digit of ``to_text``)."""
+    return float(np.add.accumulate(x)[-1]) if x.size else 0.0
+
+
+# Column order inside each chunk (parallel arrays).
+_UID, _SUB, _START, _FIN, _NODE, _CARBON, _ENERGY, _DEF, _TEN = range(9)
+
+
 @dataclass
 class MetricsCollector:
     slo_latency_s: Optional[float] = None
-    records: List[TaskRecord] = field(default_factory=list)
     timeline: List[TimelineSample] = field(default_factory=list)
     deferred_tasks: int = 0
     # Per-tenant SLO classes (DESIGN.md §7): a tenant's violations are
@@ -85,10 +105,129 @@ class MetricsCollector:
     # reports stay byte-identical to pre-resilience ones.
     dead: Dict[str, int] = field(default_factory=dict)
 
+    def __post_init__(self):
+        self._names: List[str] = [""]         # interned node/tenant names
+        self._name_idx: Dict[str, int] = {"": 0}
+        self._chunks: List[tuple] = []        # consolidated column batches
+        self._buf: List[list] = [[] for _ in range(9)]   # scalar appends
+        self._n = 0
+        self._cat: Optional[tuple] = None     # cached concatenated columns
+        self._recs: Optional[List[TaskRecord]] = None
+
+    # -- interning ----------------------------------------------------------
+    def intern(self, name: str) -> int:
+        code = self._name_idx.get(name)
+        if code is None:
+            code = self._name_idx[name] = len(self._names)
+            self._names.append(name)
+        return code
+
+    def intern_array(self, names) -> np.ndarray:
+        """Codes for an array/sequence of names (O(distinct) dict work
+        when callers pass ``np.unique``'s uniq array)."""
+        return np.array([self.intern(str(n)) for n in names],
+                        dtype=np.int64)
+
+    # -- ingestion ----------------------------------------------------------
+    @property
+    def n_records(self) -> int:
+        """Completed-task count without materializing ``records``."""
+        return self._n
+
     def add(self, rec: TaskRecord) -> None:
-        self.records.append(rec)
+        b = self._buf
+        b[_UID].append(rec.uid)
+        b[_SUB].append(rec.submit_hour)
+        b[_START].append(rec.start_hour)
+        b[_FIN].append(rec.finish_hour)
+        b[_NODE].append(self.intern(rec.node))
+        b[_CARBON].append(rec.carbon_g)
+        b[_ENERGY].append(rec.energy_kwh)
+        b[_DEF].append(rec.deferred_hours)
+        b[_TEN].append(self.intern(rec.tenant))
+        self._n += 1
+        self._cat = None
         if rec.deferred_hours > 0:
             self.deferred_tasks += 1
+
+    def add_batch(self, uids: np.ndarray, submit_hours: np.ndarray,
+                  start_hour: float, finish_hours: np.ndarray,
+                  node_codes: np.ndarray, carbon_g: np.ndarray,
+                  energy_kwh: np.ndarray, deferred_hours: np.ndarray,
+                  tenant_codes: np.ndarray) -> None:
+        """One engine step's completions as columns (DESIGN.md §11):
+        ``start_hour`` is the shared batch execution instant; node/tenant
+        codes come from :meth:`intern` / :meth:`intern_array`."""
+        n = len(uids)
+        if n == 0:
+            return
+        self._flush_buf()
+        self._chunks.append((
+            np.asarray(uids, dtype=np.int64),
+            np.asarray(submit_hours, dtype=float),
+            np.full(n, float(start_hour)),
+            np.asarray(finish_hours, dtype=float),
+            np.asarray(node_codes, dtype=np.int64),
+            np.asarray(carbon_g, dtype=float),
+            np.asarray(energy_kwh, dtype=float),
+            np.asarray(deferred_hours, dtype=float),
+            np.asarray(tenant_codes, dtype=np.int64)))
+        self._n += n
+        self._cat = None
+        self.deferred_tasks += int(np.count_nonzero(
+            np.asarray(deferred_hours) > 0))
+
+    def _flush_buf(self) -> None:
+        if not self._buf[_UID]:
+            return
+        b = self._buf
+        self._chunks.append((
+            np.asarray(b[_UID], dtype=np.int64),
+            np.asarray(b[_SUB], dtype=float),
+            np.asarray(b[_START], dtype=float),
+            np.asarray(b[_FIN], dtype=float),
+            np.asarray(b[_NODE], dtype=np.int64),
+            np.asarray(b[_CARBON], dtype=float),
+            np.asarray(b[_ENERGY], dtype=float),
+            np.asarray(b[_DEF], dtype=float),
+            np.asarray(b[_TEN], dtype=np.int64)))
+        self._buf = [[] for _ in range(9)]
+
+    def _data(self) -> tuple:
+        """The nine concatenated record columns, cached until the next
+        append."""
+        if self._cat is None:
+            self._flush_buf()
+            if not self._chunks:
+                self._cat = (np.empty(0, dtype=np.int64),) + \
+                    tuple(np.empty(0) for _ in range(3)) + \
+                    (np.empty(0, dtype=np.int64),) + \
+                    tuple(np.empty(0) for _ in range(3)) + \
+                    (np.empty(0, dtype=np.int64),)
+            elif len(self._chunks) == 1:
+                self._cat = self._chunks[0]
+            else:
+                self._cat = tuple(
+                    np.concatenate([c[j] for c in self._chunks])
+                    for j in range(9))
+                self._chunks = [self._cat]
+        return self._cat
+
+    @property
+    def records(self) -> List[TaskRecord]:
+        """Object view of the columns, materialized on demand (reports,
+        tests, examples — not the hot path)."""
+        if self._recs is not None and len(self._recs) == self._n:
+            return self._recs
+        uid, sub, st, fin, nc, cg, en, df, tc = self._data()
+        names = self._names
+        self._recs = [
+            TaskRecord(u, s, a, f, names[m], c, e, d, names[t])
+            for u, s, a, f, m, c, e, d, t in zip(
+                uid.tolist(), sub.tolist(), st.tolist(), fin.tolist(),
+                nc.tolist(), cg.tolist(), en.tolist(), df.tolist(),
+                tc.tolist())]
+        return self._recs
 
     def add_sample(self, s: TimelineSample) -> None:
         self.timeline.append(s)
@@ -106,23 +245,29 @@ class MetricsCollector:
         self.dead[tenant] = self.dead.get(tenant, 0) + 1
 
     # -- reductions ---------------------------------------------------------
+    def _waits_lats(self):
+        _, sub, st, fin, *_ = self._data()
+        return (st - sub) * 3600.0, (fin - sub) * 3600.0
+
+    def carbon_g_total(self) -> float:
+        return _seq_sum(self._data()[_CARBON])
+
     def wait_histogram(self) -> List[int]:
-        waits = [r.wait_s for r in self.records]
+        waits, _ = self._waits_lats()
         hist, _ = np.histogram(waits, bins=np.array(WAIT_HIST_EDGES_S))
         return [int(c) for c in hist]
 
     def summary(self) -> Dict:
-        waits = np.array([r.wait_s for r in self.records])
-        lats = np.array([r.latency_s for r in self.records])
-        n = len(self.records)
+        waits, lats = self._waits_lats()
+        n = self._n
         viol = (int(np.sum(lats > self.slo_latency_s))
                 if self.slo_latency_s is not None else 0)
-        carbon = float(sum(r.carbon_g for r in self.records))
+        carbon = self.carbon_g_total()
         return {
             "tasks": n,
             "carbon_g_total": carbon,
             "carbon_g_per_task": carbon / n if n else 0.0,
-            "energy_kwh_total": float(sum(r.energy_kwh for r in self.records)),
+            "energy_kwh_total": _seq_sum(self._data()[_ENERGY]),
             "wait_s_mean": float(np.mean(waits)) if n else 0.0,
             "wait_s_p50": _pct(waits, 50), "wait_s_p95": _pct(waits, 95),
             "wait_s_p99": _pct(waits, 99),
@@ -136,40 +281,49 @@ class MetricsCollector:
         }
 
     # -- per-tenant reductions (DESIGN.md §7) -------------------------------
-    def _tenant_groups(self) -> Dict[str, List[TaskRecord]]:
-        """Records grouped per tenant in one pass (names with only
-        counter activity get an empty group)."""
-        groups: Dict[str, List[TaskRecord]] = {}
-        for r in self.records:
-            if r.tenant:
-                groups.setdefault(r.tenant, []).append(r)
+    def _tenant_masks(self) -> Dict[str, np.ndarray]:
+        """Record mask per tenant in column form (names with only counter
+        activity get an all-False mask)."""
+        tc = self._data()[_TEN]
+        masks: Dict[str, np.ndarray] = {}
+        for code, name in enumerate(self._names):
+            if not name:
+                continue
+            m = tc == code
+            if m.any():
+                masks[name] = m
+        empty = None
         for name in (set(self.rejected) | set(self.abandoned)
                      | set(self.retries) | set(self.dead)):
-            if name:
-                groups.setdefault(name, [])
-        return groups
+            if name and name not in masks:
+                if empty is None:
+                    empty = np.zeros(self._n, dtype=bool)
+                masks[name] = empty
+        return masks
 
     def tenant_names(self) -> List[str]:
-        return sorted(self._tenant_groups())
+        return sorted(self._tenant_masks())
 
     def tenant_summary(self) -> Dict[str, Dict]:
         """Per-tenant SLO attainment (vs the tenant's own SLO class,
         including its miss tolerance), admission/abandon rates and carbon
         breakdown. Empty for untenanted sims (so their reports stay
         byte-identical to the pre-tenancy format)."""
+        cols = self._data()
+        _, lats_all = self._waits_lats()
         out: Dict[str, Dict] = {}
-        for name, recs in sorted(self._tenant_groups().items()):
-            lats = np.array([r.latency_s for r in recs])
+        for name, mask in sorted(self._tenant_masks().items()):
+            lats = lats_all[mask]
             slo = self.tenant_slo_s.get(name, self.slo_latency_s)
             viol = int(np.sum(lats > slo)) if slo is not None else 0
-            n = len(recs)
+            n = int(lats.size)
             rej = self.rejected.get(name, 0)
             attain = 1.0 - viol / n if n else 1.0
             tol = self.tenant_miss_tolerance.get(name, 0.0)
             out[name] = {
                 "completed": n,
-                "carbon_g": float(sum(r.carbon_g for r in recs)),
-                "energy_kwh": float(sum(r.energy_kwh for r in recs)),
+                "carbon_g": _seq_sum(cols[_CARBON][mask]),
+                "energy_kwh": _seq_sum(cols[_ENERGY][mask]),
                 "latency_s_p95": _pct(lats, 95),
                 "slo_latency_s": slo,
                 "slo_violations": viol,
@@ -180,7 +334,7 @@ class MetricsCollector:
                 "admission_rate": n / (n + rej) if (n + rej) else 1.0,
                 "abandoned": self.abandoned.get(name, 0),
                 "retries": self.retries.get(name, 0),
-                "deferred": sum(1 for r in recs if r.deferred_hours > 0),
+                "deferred": int(np.count_nonzero(cols[_DEF][mask] > 0)),
             }
         return out
 
@@ -198,9 +352,11 @@ class MetricsCollector:
             if isinstance(v, (int, float)) and not isinstance(v, bool) \
                     and v is not None:
                 g.set(float(v), (k,))
-        if self.records:
-            nodes = np.array([r.node for r in self.records])
-            carbon = np.array([r.carbon_g for r in self.records])
+        if self._n:
+            cols = self._data()
+            names_arr = np.array(self._names, dtype=object)
+            nodes = names_arr[cols[_NODE]]
+            carbon = cols[_CARBON]
             uniq, inverse = np.unique(nodes, return_inverse=True)
             done = registry.counter("sim_tasks_total",
                                     "Tasks completed per node",
@@ -255,11 +411,15 @@ class MetricsCollector:
             lines.append(f"tick hour={t.hour:.9g} completed={t.completed} "
                          f"carbon_g={t.carbon_g_cum:.9g} "
                          f"intensity={t.mean_intensity:.9g}")
-        for r in self.records:
-            tenant = f" tenant={r.tenant}" if r.tenant else ""
+        uid, sub, st, fin, nc, cg, en, df, tc = self._data()
+        names = self._names
+        for u, m, s_, a, f, c, d, t in zip(
+                uid.tolist(), nc.tolist(), sub.tolist(), st.tolist(),
+                fin.tolist(), cg.tolist(), df.tolist(), tc.tolist()):
+            tenant = f" tenant={names[t]}" if names[t] else ""
             lines.append(
-                f"task uid={r.uid} node={r.node} submit={r.submit_hour:.9g} "
-                f"start={r.start_hour:.9g} finish={r.finish_hour:.9g} "
-                f"carbon_g={r.carbon_g:.9g} "
-                f"deferred_h={r.deferred_hours:.9g}{tenant}")
+                f"task uid={u} node={names[m]} submit={s_:.9g} "
+                f"start={a:.9g} finish={f:.9g} "
+                f"carbon_g={c:.9g} "
+                f"deferred_h={d:.9g}{tenant}")
         return "\n".join(lines) + "\n"
