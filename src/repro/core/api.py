@@ -697,6 +697,11 @@ class CarbonEdgeEngine:
         # attributes. None whenever the last step used the scalar path,
         # partially failed, or went through tenancy admission.
         self.last_exec = None
+        # Original-batch positions the resilience gate re-placed off a
+        # down/unknown node in the last step (DESIGN.md §12) — the sim
+        # driver's JourneyTrace counts failover hops from this. None when
+        # the gate did not fire or nothing needed re-placement.
+        self.last_failover_pos = None
         if self.obs is not None:
             self._wire_obs()
 
@@ -744,6 +749,7 @@ class CarbonEdgeEngine:
         self.last_outcomes = None
         self._exec_snapshot = None
         self.last_exec = None
+        self.last_failover_pos = None
         if not self.queue:
             return []
         b = limit if limit is not None else (self.batch_size or len(self.queue))
@@ -893,6 +899,7 @@ class CarbonEdgeEngine:
         bad = [i for i, ch in enumerate(choices)
                if ch is not None and (ch in down or ch not in nodes)]
         if bad:
+            self.last_failover_pos = [pos[i] for i in bad]
             for n in {choices[i] for i in bad}:
                 res.contact_failure(n, now_hour)
             sub = [tasks[i] for i in bad]
@@ -1231,7 +1238,8 @@ class CarbonEdgeEngine:
                                   carbon_g(e_kwh, ev[inverse],
                                            self.cluster.pue))
             if obs is not None and (obs.trace is not None
-                                    or obs.metrics is not None):
+                                    or obs.metrics is not None
+                                    or obs.rollups is not None):
                 # stash the already-computed batched arrays so the trace/
                 # metrics record after a successful step adds no provider
                 # re-reads or O(B) Python (DESIGN.md §9)
@@ -1353,7 +1361,8 @@ class CarbonEdgeEngine:
         the batched-execute snapshot (no per-task Python; the scalar
         parity oracle falls back to gathering from its B results)."""
         trace, metrics = obs.trace, obs.metrics
-        if trace is None and metrics is None:
+        roll = obs.rollups
+        if trace is None and metrics is None and roll is None:
             return
         prof = obs.profiler
         t0 = perf_counter() if prof is not None else 0.0
@@ -1376,6 +1385,11 @@ class CarbonEdgeEngine:
             bv = np.asarray(self.monitor.billing_intensity_batch(
                 list(uniq), now_hour), dtype=float)
             carbon = np.asarray([r.carbon_g for r in results], dtype=float)
+            e_kwh = (np.asarray([r.energy_kwh for r in results], dtype=float)
+                     if roll is not None else None)
+        if roll is not None:
+            roll.fold_exec(now_hour, carbon, e_kwh)
+            roll.fold_verdicts(now_hour, (B, 0, 0, 0, 0))  # all done
         if trace is not None:
             lo, hi = self._obs_intervals(uniq, inverse, now_hour)
             score = runner = cut = None
@@ -1411,7 +1425,8 @@ class CarbonEdgeEngine:
         the executed positions and sources verdicts from the published
         outcomes, so retried/dead rows trace as such."""
         trace, metrics = obs.trace, obs.metrics
-        if trace is None and metrics is None:
+        roll = obs.rollups
+        if trace is None and metrics is None and roll is None:
             return
         prof = obs.profiler
         t0 = perf_counter() if prof is not None else 0.0
@@ -1432,7 +1447,7 @@ class CarbonEdgeEngine:
                 np.where(plan.actions == _REJECT, 1, 2)).astype(np.int8)
             pos_exec = (np.arange(len(results)) if aidx is None
                         else np.asarray(aidx))
-        uniq = inverse = carbon = None
+        uniq = inverse = carbon = e_kwh = None
         if results:
             snap = self._exec_snapshot
             if snap is not None:
@@ -1450,6 +1465,25 @@ class CarbonEdgeEngine:
                     list(uniq), now_hour), dtype=float)
                 carbon = np.asarray([r.carbon_g for r in results],
                                     dtype=float)
+                e_kwh = (np.asarray([r.energy_kwh for r in results],
+                                    dtype=float)
+                         if roll is not None else None)
+        if roll is not None:
+            if results:
+                roll.fold_exec(now_hour, carbon, e_kwh)
+                reg = getattr(self.policy, "registry", None)
+                index = getattr(reg, "index", None)
+                if index:
+                    names = np.asarray(sorted(index, key=index.get),
+                                       dtype=object)
+                    tmap = roll.intern_tenants(names)
+                    tidx = np.asarray(plan.tenant_idx)[pos_exec]
+                    tagged = tidx >= 0
+                    if tagged.any():
+                        roll.fold_tenant_spend(now_hour, tmap[tidx[tagged]],
+                                               carbon[tagged])
+            roll.fold_verdicts(
+                now_hour, np.bincount(verdict, minlength=5)[:5])
         if trace is not None:
             node = np.full(B, -1, dtype=np.int32)
             intens = np.full(B, np.nan)
@@ -1547,6 +1581,12 @@ class CarbonEdgeEngine:
                 cuts = obs.trace.cut_histogram()
                 if cuts:
                     deep["partition"] = {"cut_histogram": cuts}
+            if obs.journeys is not None:
+                deep["journeys"] = obs.journeys.stats()
+            if obs.rollups is not None:
+                deep["rollups"] = obs.rollups.stats()
+            if obs.alerts is not None:
+                deep["alerts"] = obs.alerts.stats()
             if obs.metrics is not None:
                 deep["metrics"] = obs.metrics.snapshot()
         deep["deferral"] = {

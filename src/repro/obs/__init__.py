@@ -1,6 +1,6 @@
-"""repro.obs — always-available observability (DESIGN.md §9).
+"""repro.obs — always-available observability (DESIGN.md §9, §12).
 
-Three pillars, each independently switchable and ``None`` when off:
+Six pillars, each independently switchable and ``None`` when off:
 
 - :class:`~repro.obs.trace.DecisionTrace` — column-oriented ring buffer
   of per-task scheduling decisions (node/cut/mode, winning vs runner-up
@@ -10,6 +10,16 @@ Three pillars, each independently switchable and ``None`` when off:
   gauges / histograms with Prometheus-style text exposition.
 - :class:`~repro.obs.profiler.StepProfiler` — ``perf_counter`` spans
   around the engine/sim phases, folded into per-phase histograms.
+- :class:`~repro.obs.journey.JourneyTrace` — per-request causal record
+  keyed by sim task uid (arrival → verdicts → defer/wake → retry/failover
+  → execute-or-dead-letter) with ``explain_journey`` forensics and a
+  vectorized critical-path decomposition.
+- :class:`~repro.obs.rollup.RollupStore` — fixed-width sim-time windows
+  folding carbon/energy/SLO/verdict/tenant/availability columns into
+  bounded-memory series (O(windows), not O(tasks)).
+- :class:`~repro.obs.alerts.AlertEngine` — declarative threshold /
+  burn-rate rules evaluated vectorized per rollup window, emitting a
+  deterministic fire/resolve event log.
 
 ``Observability`` bundles them for threading through
 ``CarbonEdgeEngine(obs=...)`` and ``AsyncEngineDriver(obs=...)``. The
@@ -22,19 +32,29 @@ from __future__ import annotations
 
 import logging
 import sys
-from typing import Dict, Union
+from typing import Dict, Optional, Sequence, Union
 
+from repro.obs.alerts import (ALERT_KINDS, AlertEngine, AlertEvent,
+                              AlertRule, default_rules)
+from repro.obs.journey import (J_DEAD, J_DONE, J_OPEN, J_REJECT,
+                               PARK_DEFER, PARK_RETRY, STATE_LABELS,
+                               JourneyTrace)
 from repro.obs.profiler import SPAN_EDGES_S, StepProfiler
 from repro.obs.registry import DEFAULT_EDGES, Family, MetricsRegistry
+from repro.obs.rollup import VERDICT_COLS, RollupStore
 from repro.obs.trace import (MODE_LABELS, VERDICT_DEAD, VERDICT_DEFER,
                              VERDICT_DONE, VERDICT_LABELS, VERDICT_REJECT,
                              VERDICT_RETRY, DecisionTrace)
 
 __all__ = [
-    "DEFAULT_EDGES", "DecisionTrace", "Family", "MetricsRegistry",
-    "MODE_LABELS", "Observability", "SPAN_EDGES_S", "StepProfiler",
-    "VERDICT_DEAD", "VERDICT_DEFER", "VERDICT_DONE", "VERDICT_LABELS",
-    "VERDICT_REJECT", "VERDICT_RETRY", "console_logger",
+    "ALERT_KINDS", "AlertEngine", "AlertEvent", "AlertRule",
+    "DEFAULT_EDGES", "DecisionTrace", "Family", "J_DEAD", "J_DONE",
+    "J_OPEN", "J_REJECT", "JourneyTrace", "MetricsRegistry",
+    "MODE_LABELS", "Observability", "PARK_DEFER", "PARK_RETRY",
+    "RollupStore", "SPAN_EDGES_S", "STATE_LABELS", "StepProfiler",
+    "VERDICT_COLS", "VERDICT_DEAD", "VERDICT_DEFER", "VERDICT_DONE",
+    "VERDICT_LABELS", "VERDICT_REJECT", "VERDICT_RETRY", "console_logger",
+    "default_rules",
 ]
 
 
@@ -48,24 +68,45 @@ class Observability:
                  trace: Union[bool, DecisionTrace] = False,
                  metrics: Union[bool, MetricsRegistry] = False,
                  profile: Union[bool, StepProfiler] = False,
-                 trace_capacity: int = 1 << 16) -> None:
+                 journeys: Union[bool, JourneyTrace] = False,
+                 rollups: Union[bool, RollupStore] = False,
+                 alerts: Union[bool, AlertEngine] = False,
+                 trace_capacity: int = 1 << 16,
+                 rollup_window_hours: float = 0.25,
+                 alert_rules: Optional[Sequence[AlertRule]] = None) -> None:
         self.trace = (trace if isinstance(trace, DecisionTrace)
                       else DecisionTrace(trace_capacity) if trace else None)
         self.metrics = (metrics if isinstance(metrics, MetricsRegistry)
                         else MetricsRegistry() if metrics else None)
         self.profiler = (profile if isinstance(profile, StepProfiler)
                          else StepProfiler() if profile else None)
+        self.journeys = (journeys if isinstance(journeys, JourneyTrace)
+                         else JourneyTrace() if journeys else None)
+        self.rollups = (rollups if isinstance(rollups, RollupStore)
+                        else RollupStore(rollup_window_hours)
+                        if rollups else None)
+        # Alerts need rollups to evaluate against; an AlertEngine without
+        # a RollupStore is inert but harmless (evaluate is never called).
+        self.alerts = (alerts if isinstance(alerts, AlertEngine)
+                       else AlertEngine(alert_rules) if alerts else None)
 
     @classmethod
-    def all(cls, trace_capacity: int = 1 << 16) -> "Observability":
+    def all(cls, trace_capacity: int = 1 << 16,
+            rollup_window_hours: float = 0.25,
+            alert_rules: Optional[Sequence[AlertRule]] = None
+            ) -> "Observability":
         """Every pillar on — the ``gate_obs`` enabled configuration."""
         return cls(trace=True, metrics=True, profile=True,
-                   trace_capacity=trace_capacity)
+                   journeys=True, rollups=True, alerts=True,
+                   trace_capacity=trace_capacity,
+                   rollup_window_hours=rollup_window_hours,
+                   alert_rules=alert_rules)
 
     @property
     def enabled(self) -> bool:
         return (self.trace is not None or self.metrics is not None
-                or self.profiler is not None)
+                or self.profiler is not None or self.journeys is not None
+                or self.rollups is not None or self.alerts is not None)
 
     def report(self) -> Dict:
         """JSON-ready summary of whatever pillars are on."""
@@ -74,6 +115,12 @@ class Observability:
             out["trace"] = self.trace.stats()
         if self.profiler is not None:
             out["profiler"] = self.profiler.summary()
+        if self.journeys is not None:
+            out["journeys"] = self.journeys.stats()
+        if self.rollups is not None:
+            out["rollups"] = self.rollups.stats()
+        if self.alerts is not None:
+            out["alerts"] = self.alerts.stats()
         if self.metrics is not None:
             out["metrics"] = self.metrics.snapshot()
         return out

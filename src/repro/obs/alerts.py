@@ -1,0 +1,212 @@
+"""Declarative alerting over windowed rollups (DESIGN.md §12).
+
+``AlertEngine`` evaluates a list of :class:`AlertRule` thresholds as one
+vectorized pass per complete rollup window and emits deterministic
+fire/resolve :class:`AlertEvent` records. Rules are pure window-level
+predicates over :class:`~repro.obs.rollup.RollupStore` columns:
+
+- ``slo_burn_rate``   — window SLO-miss fraction vs a miss tolerance;
+- ``carbon_pace``     — (per-tenant) carbon grams spent in the window vs
+  the allowance pace (allowance_g x window/period);
+- ``dead_letter_rate``— window dead-letter fraction of terminal verdicts;
+- ``availability``    — per-window availability floor below a fraction.
+
+Evaluation is incremental (``evaluate`` only looks at windows completed
+since the previous call) and stateful per rule: a rule *fires* on the
+first window its predicate trips while inactive and *resolves* on the
+first clean window while active, so the event stream is a deduplicated
+transition log, not a per-window spam feed. Events are ordered (window
+asc, then rule order) and rendered with ``%.9g`` floats — the
+byte-comparison surface for the alert-determinism gate. ``export``
+publishes fire/resolve counts per rule into a ``MetricsRegistry`` as
+labelled counters; it deliberately does NOT touch the sim's
+``MetricsCollector.to_text`` so the zero-overhead byte-identity
+contract of the disabled path is preserved.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .rollup import RollupStore, VERDICT_COLS
+
+ALERT_KINDS = ("slo_burn_rate", "carbon_pace", "dead_letter_rate",
+               "availability")
+
+
+@dataclass(frozen=True)
+class AlertRule:
+    """One declarative threshold over a rollup window.
+
+    ``threshold`` semantics per kind: ``slo_burn_rate`` and
+    ``dead_letter_rate`` trip when the window fraction EXCEEDS it;
+    ``carbon_pace`` trips when window grams (for ``tenant``, or fleet
+    when ``tenant`` is None) exceed it; ``availability`` trips when the
+    window floor drops BELOW it. ``min_tasks`` suppresses rate rules on
+    near-empty windows where one task flips the fraction.
+    """
+    name: str
+    kind: str
+    threshold: float
+    tenant: Optional[str] = None
+    min_tasks: int = 1
+
+    def __post_init__(self) -> None:
+        if self.kind not in ALERT_KINDS:
+            raise ValueError(f"unknown alert kind: {self.kind!r}")
+
+
+@dataclass(frozen=True)
+class AlertEvent:
+    """One deterministic transition: ``action`` is 'fire' or 'resolve',
+    ``hour`` is the end of the triggering window, ``value`` the observed
+    window statistic."""
+    hour: float
+    window: int
+    rule: str
+    action: str
+    value: float
+
+    def render(self) -> str:
+        return (f"hour={self.hour:.9g} w={self.window} rule={self.rule} "
+                f"{self.action} value={self.value:.9g}")
+
+
+def default_rules(*, miss_tolerance: float = 0.1,
+                  dead_letter_tolerance: float = 0.05,
+                  availability_floor: float = 0.5,
+                  min_tasks: int = 8) -> List[AlertRule]:
+    """Fleet-level starter rules (per-tenant carbon-pace rules come from
+    ``TenantPolicy.alert_rules``)."""
+    return [
+        AlertRule("slo_burn", "slo_burn_rate", miss_tolerance,
+                  min_tasks=min_tasks),
+        AlertRule("dead_letter", "dead_letter_rate", dead_letter_tolerance,
+                  min_tasks=min_tasks),
+        AlertRule("availability", "availability", availability_floor,
+                  min_tasks=0),
+    ]
+
+
+class AlertEngine:
+    """Vectorized fire/resolve evaluation of rules over rollup windows."""
+
+    def __init__(self, rules: Optional[Sequence[AlertRule]] = None) -> None:
+        self.rules: List[AlertRule] = list(rules) if rules else []
+        self.events: List[AlertEvent] = []
+        self._active = np.zeros(len(self.rules), dtype=bool)
+        self._evaluated = 0               # windows already consumed
+
+    def add_rules(self, rules: Sequence[AlertRule]) -> None:
+        if not rules:
+            return
+        self.rules.extend(rules)
+        self._active = np.concatenate(
+            [self._active, np.zeros(len(rules), dtype=bool)])
+
+    @property
+    def active(self) -> List[str]:
+        return [r.name for r, a in zip(self.rules, self._active) if a]
+
+    # ------------------------------------------------------------------
+    def _rule_values(self, rule: AlertRule, roll: RollupStore,
+                     lo: int, hi: int, avail: np.ndarray) -> np.ndarray:
+        """Observed statistic per window ``lo..hi-1`` (nan = no signal,
+        never trips and never resolves an active alert by itself)."""
+        tasks = roll.tasks[lo:hi].astype(float)
+        if rule.kind == "slo_burn_rate":
+            val = np.where(tasks >= max(rule.min_tasks, 1),
+                           roll.slo_miss[lo:hi] / np.maximum(tasks, 1.0),
+                           np.nan)
+        elif rule.kind == "dead_letter_rate":
+            term = (roll.verdicts[lo:hi, VERDICT_COLS.index("done")]
+                    + roll.verdicts[lo:hi, VERDICT_COLS.index("reject")]
+                    + roll.verdicts[lo:hi, VERDICT_COLS.index("dead")]
+                    ).astype(float)
+            val = np.where(term >= max(rule.min_tasks, 1),
+                           roll.verdicts[lo:hi, VERDICT_COLS.index("dead")]
+                           / np.maximum(term, 1.0),
+                           np.nan)
+        elif rule.kind == "carbon_pace":
+            if rule.tenant is None:
+                val = roll.carbon_g[lo:hi].copy()
+            else:
+                i = roll._tenant_idx.get(rule.tenant)
+                val = (roll.tenant_spend[i, lo:hi].copy()
+                       if i is not None else np.full(hi - lo, np.nan))
+        else:  # availability
+            val = avail[lo:hi].copy()
+        return val
+
+    def evaluate(self, roll: RollupStore,
+                 up_to_window: Optional[int] = None) -> List[AlertEvent]:
+        """Consume windows completed since the last call and return the
+        NEW events (also appended to ``self.events``). ``up_to_window``
+        caps evaluation (exclusive); default = all touched windows."""
+        hi = roll.n_windows if up_to_window is None \
+            else min(up_to_window, roll.n_windows)
+        lo = self._evaluated
+        if hi <= lo or not self.rules:
+            self._evaluated = max(self._evaluated, hi)
+            return []
+        avail = roll.availability()
+        wh = roll.window_hours
+        # (R, W) trip matrix, one vectorized comparison per rule.
+        new: List[AlertEvent] = []
+        transitions: List[tuple] = []     # (window, rule_idx, fired, value)
+        for ri, rule in enumerate(self.rules):
+            val = self._rule_values(rule, roll, lo, hi, avail)
+            if rule.kind == "availability":
+                trip = val < rule.threshold
+            else:
+                trip = val > rule.threshold
+            trip = np.where(np.isnan(val), False, trip)
+            state = bool(self._active[ri])
+            for k in range(hi - lo):
+                if np.isnan(val[k]):
+                    continue              # no signal: hold state
+                t = bool(trip[k])
+                if t != state:
+                    transitions.append((lo + k, ri, t, float(val[k])))
+                    state = t
+            self._active[ri] = state
+        transitions.sort(key=lambda e: (e[0], e[1]))
+        for w, ri, fired, value in transitions:
+            new.append(AlertEvent(
+                hour=(w + 1) * wh, window=w, rule=self.rules[ri].name,
+                action="fire" if fired else "resolve", value=value))
+        self.events.extend(new)
+        self._evaluated = hi
+        return new
+
+    # ------------------------------------------------------------------
+    def counts(self) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {}
+        for ev in self.events:
+            d = out.setdefault(ev.rule, {"fire": 0, "resolve": 0})
+            d[ev.action] += 1
+        return out
+
+    def export(self, registry) -> None:
+        """Publish per-rule fire/resolve counters into a MetricsRegistry."""
+        fam = registry.counter("repro_alert_events_total",
+                               "Alert fire/resolve transitions.",
+                               labels=("rule", "action"))
+        for rule, d in sorted(self.counts().items()):
+            for action in ("fire", "resolve"):
+                if d[action]:
+                    fam.inc(d[action], labels=(rule, action))
+
+    def stats(self) -> Dict:
+        return {"rules": len(self.rules),
+                "events": len(self.events),
+                "active": self.active,
+                "windows_evaluated": self._evaluated}
+
+    def to_text(self) -> str:
+        """Deterministic event log — the byte-comparison surface for the
+        alert-determinism gate."""
+        lines = [ev.render() for ev in self.events]
+        return "\n".join(lines) + ("\n" if lines else "")

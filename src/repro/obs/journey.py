@@ -1,0 +1,376 @@
+"""Per-request journey trace (DESIGN.md §12).
+
+``JourneyTrace`` is the causal record of one request's life across the
+sim: arrival -> (forecast plan-defer) -> enqueue -> admission verdict(s)
+-> budget-defer / retry-backoff parks -> failover hops -> execute,
+reject, or dead-letter. ``DecisionTrace`` (§9) answers "what did the
+scheduler decide *this step*"; the journey answers "why was THIS request
+slow/dirty/dead" across every step and event it touched.
+
+Storage is columnar and keyed by the driver's dense task uid: parallel
+numpy arrays indexed ``[uid]``, grown by doubling, populated by batched
+scatters from the sim driver's existing enqueue/drain/outcome paths — a
+step's whole drained batch lands as a handful of fancy-index writes, no
+per-task Python on the hot path. Each uid's wall phases are accumulated
+so that for a completed journey
+
+    plan_defer + queue_wait + budget_defer + retry_backoff + service
+        == finish - submit            (hours, up to float associativity)
+
+— the vectorized critical-path identity :meth:`critical_path` verifies
+over the whole run and :meth:`explain_journey` renders per uid.
+
+Recording never touches an RNG or the sim's ``MetricsCollector``, so a
+wired journey trace leaves ``metrics.to_text`` byte-identical (the §9
+zero-overhead-when-disabled contract extends to this pillar: the driver
+holds ``None`` when off and guards every hook with one ``is not None``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# Terminal-state encoding for the ``state`` column.
+J_OPEN, J_DONE, J_REJECT, J_DEAD = 0, 1, 2, 3
+STATE_LABELS = ("open", "done", "reject", "dead")
+
+# Park-kind encoding for the ``park_kind`` column (-1 = not parked).
+PARK_DEFER, PARK_RETRY = 0, 1
+
+_GROW_MIN = 1024
+
+
+class JourneyTrace:
+    """Growable uid-indexed columns tracing each request's causal path."""
+
+    def __init__(self, capacity: int = _GROW_MIN) -> None:
+        cap = max(int(capacity), 1)
+        self._name_ids: Dict[str, Dict[str, int]] = {"node": {},
+                                                     "tenant": {}}
+        self._names: Dict[str, List[str]] = {"node": [], "tenant": []}
+        self.max_uid = 0                  # highest uid ever recorded
+        self._alloc(cap)
+
+    def _alloc(self, cap: int) -> None:
+        self.submit = np.full(cap, np.nan)
+        self.enqueue_hour = np.full(cap, np.nan)   # first queue entry
+        self.last_enqueue = np.full(cap, np.nan)
+        self.plan_defer_h = np.zeros(cap)          # forecast-planned wait
+        self.budget_defer_h = np.zeros(cap)        # tenancy park time
+        self.retry_backoff_h = np.zeros(cap)       # resilience park time
+        self.queue_wait_h = np.zeros(cap)          # summed enqueue->drain
+        self.start = np.full(cap, np.nan)          # final exec batch hour
+        self.finish = np.full(cap, np.nan)
+        self.state = np.zeros(cap, dtype=np.int8)  # J_OPEN
+        self.drains = np.zeros(cap, dtype=np.int32)   # verdicts seen
+        self.defers = np.zeros(cap, dtype=np.int32)
+        self.retries = np.zeros(cap, dtype=np.int32)
+        self.failovers = np.zeros(cap, dtype=np.int32)
+        self.park_kind = np.full(cap, -1, dtype=np.int8)
+        self.parked_at = np.full(cap, np.nan)
+        self.tenant = np.full(cap, -1, dtype=np.int32)
+        self.node = np.full(cap, -1, dtype=np.int32)
+
+    @property
+    def capacity(self) -> int:
+        return self.submit.size
+
+    def _grow_to(self, uid_max: int) -> None:
+        need = uid_max + 1
+        have = self.capacity
+        if need <= have:
+            return
+        new = max(need, 2 * have, _GROW_MIN)
+        old = {k: getattr(self, k) for k in (
+            "submit", "enqueue_hour", "last_enqueue", "plan_defer_h",
+            "budget_defer_h", "retry_backoff_h", "queue_wait_h", "start",
+            "finish", "state", "drains", "defers", "retries", "failovers",
+            "park_kind", "parked_at", "tenant", "node")}
+        self._alloc(new)
+        for k, arr in old.items():
+            getattr(self, k)[:arr.size] = arr
+
+    # ------------------------------------------------------------------
+    # interning (same shape as DecisionTrace's — own namespaces)
+    # ------------------------------------------------------------------
+    def intern_names(self, names, kind: str = "node") -> np.ndarray:
+        arr = np.asarray(names, dtype=object)
+        if arr.size == 0:
+            return np.zeros(0, dtype=np.int32)
+        table = self._name_ids[kind]
+        out_names = self._names[kind]
+        uniq, inv = np.unique(arr, return_inverse=True)
+        ids = np.empty(uniq.size, dtype=np.int32)
+        for k, name in enumerate(uniq):
+            i = table.get(name)
+            if i is None:
+                i = table[name] = len(out_names)
+                out_names.append(str(name))
+            ids[k] = i
+        return ids[inv]
+
+    def names(self, kind: str = "node") -> List[str]:
+        return list(self._names[kind])
+
+    def intern_tenants(self, names) -> np.ndarray:
+        """Tenant ids for a batch's tenant names, with ``""``
+        (untenanted) mapped to -1 instead of interned."""
+        arr = np.asarray(names, dtype=object)
+        out = np.full(arr.size, -1, dtype=np.int32)
+        nz = np.asarray([bool(x) for x in arr], dtype=bool)
+        if nz.any():
+            out[nz] = self.intern_names(arr[nz], "tenant")
+        return out
+
+    # ------------------------------------------------------------------
+    # recording (batched scatters; uids within one call are distinct)
+    # ------------------------------------------------------------------
+    def begin(self, uids, hours) -> None:
+        """Arrival: the requests exist as of ``hours``."""
+        u = np.asarray(uids, dtype=np.int64)
+        if u.size == 0:
+            return
+        self._grow_to(int(u.max()))
+        self.max_uid = max(self.max_uid, int(u.max()))
+        self.submit[u] = hours
+
+    def plan_defer(self, uid: int, delta_hours: float) -> None:
+        """Forecast planning parked the request ``delta_hours`` before its
+        first enqueue (the scalar planning path records one at a time)."""
+        self._grow_to(uid)
+        self.max_uid = max(self.max_uid, int(uid))
+        self.plan_defer_h[uid] += delta_hours
+
+    def enqueue(self, uids, hours) -> None:
+        """The requests entered the executor queue at ``hours``."""
+        u = np.asarray(uids, dtype=np.int64)
+        if u.size == 0:
+            return
+        self._grow_to(int(u.max()))
+        self.max_uid = max(self.max_uid, int(u.max()))
+        first = np.isnan(self.enqueue_hour[u])
+        if first.any():
+            self.enqueue_hour[u[first]] = np.asarray(hours)[first] \
+                if np.ndim(hours) else hours
+        self.last_enqueue[u] = hours
+
+    def _drained(self, u: np.ndarray, hour: float) -> None:
+        self.queue_wait_h[u] += hour - self.last_enqueue[u]
+        self.drains[u] += 1
+
+    def park(self, uids, hour: float, kind: int) -> None:
+        """A drain verdict parked the requests (budget defer or retry
+        backoff); time parked accumulates at :meth:`wake`."""
+        u = np.asarray(uids, dtype=np.int64)
+        if u.size == 0:
+            return
+        self._drained(u, hour)
+        self.park_kind[u] = kind
+        self.parked_at[u] = hour
+        if kind == PARK_DEFER:
+            self.defers[u] += 1
+        else:
+            self.retries[u] += 1
+
+    def wake(self, uids, hour: float) -> None:
+        """Parked requests woke; the park interval folds into the phase
+        the stored park kind names."""
+        u = np.asarray(uids, dtype=np.int64)
+        if u.size == 0:
+            return
+        dt = hour - self.parked_at[u]
+        was_defer = self.park_kind[u] == PARK_DEFER
+        if was_defer.any():
+            d = u[was_defer]
+            self.budget_defer_h[d] += dt[was_defer]
+        if (~was_defer).any():
+            r = u[~was_defer]
+            self.retry_backoff_h[r] += dt[~was_defer]
+        self.park_kind[u] = -1
+        self.parked_at[u] = np.nan
+
+    def failover(self, uids) -> None:
+        u = np.asarray(uids, dtype=np.int64)
+        if u.size:
+            self.failovers[u] += 1
+
+    def done(self, uids, exec_hour: float, finishes,
+             node_ids=None, tenant_ids=None) -> None:
+        """The requests executed in the batch that started at
+        ``exec_hour`` and finished serially at ``finishes``."""
+        u = np.asarray(uids, dtype=np.int64)
+        if u.size == 0:
+            return
+        self._drained(u, exec_hour)
+        self.state[u] = J_DONE
+        self.start[u] = exec_hour
+        self.finish[u] = finishes
+        if node_ids is not None:
+            self.node[u] = node_ids
+        if tenant_ids is not None:
+            self.tenant[u] = tenant_ids
+
+    def _terminal(self, uids, hour: float, state: int,
+                  tenant_ids=None) -> None:
+        u = np.asarray(uids, dtype=np.int64)
+        if u.size == 0:
+            return
+        self._drained(u, hour)
+        self.state[u] = state
+        self.finish[u] = hour
+        if tenant_ids is not None:
+            self.tenant[u] = tenant_ids
+
+    def reject(self, uids, hour: float, tenant_ids=None) -> None:
+        self._terminal(uids, hour, J_REJECT, tenant_ids)
+
+    def dead(self, uids, hour: float, tenant_ids=None) -> None:
+        self._terminal(uids, hour, J_DEAD, tenant_ids)
+
+    # ------------------------------------------------------------------
+    # reading
+    # ------------------------------------------------------------------
+    def _u(self) -> np.ndarray:
+        """All recorded uids (1..max_uid; uid 0 is never assigned)."""
+        return np.arange(1, self.max_uid + 1)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(getattr(self, k).nbytes for k in (
+            "submit", "enqueue_hour", "last_enqueue", "plan_defer_h",
+            "budget_defer_h", "retry_backoff_h", "queue_wait_h", "start",
+            "finish", "state", "drains", "defers", "retries", "failovers",
+            "park_kind", "parked_at", "tenant", "node"))
+
+    def journey(self, uid: int) -> Optional[Dict]:
+        """One uid's journey as a dict (None when never recorded)."""
+        if not 1 <= uid <= self.max_uid or np.isnan(self.submit[uid]):
+            return None
+        nd, tn = int(self.node[uid]), int(self.tenant[uid])
+        service = float(self.finish[uid] - self.start[uid]) \
+            if np.isfinite(self.start[uid]) else 0.0
+        e2e = float(self.finish[uid] - self.submit[uid]) \
+            if np.isfinite(self.finish[uid]) else None
+        return {
+            "uid": int(uid),
+            "state": STATE_LABELS[int(self.state[uid])],
+            "submit_hour": float(self.submit[uid]),
+            "finish_hour": (float(self.finish[uid])
+                            if np.isfinite(self.finish[uid]) else None),
+            "node": self._names["node"][nd] if nd >= 0 else None,
+            "tenant": self._names["tenant"][tn] if tn >= 0 else None,
+            "drains": int(self.drains[uid]),
+            "defers": int(self.defers[uid]),
+            "retries": int(self.retries[uid]),
+            "failovers": int(self.failovers[uid]),
+            "plan_defer_h": float(self.plan_defer_h[uid]),
+            "budget_defer_h": float(self.budget_defer_h[uid]),
+            "retry_backoff_h": float(self.retry_backoff_h[uid]),
+            "queue_wait_h": float(self.queue_wait_h[uid]),
+            "service_h": service,
+            "e2e_h": e2e,
+        }
+
+    def explain_journey(self, uid: int) -> Optional[str]:
+        """Multi-line forensics: the request's full causal path with its
+        critical-path decomposition in seconds."""
+        j = self.journey(uid)
+        if j is None:
+            return None
+        head = f"journey uid={uid} [{j['state']}]"
+        if j["tenant"]:
+            head += f" tenant={j['tenant']!r}"
+        lines = [head,
+                 f"  submitted at {j['submit_hour']:.6g} h; "
+                 f"drained {j['drains']}x"]
+        hops = []
+        if j["defers"]:
+            hops.append(f"budget-deferred {j['defers']}x")
+        if j["retries"]:
+            hops.append(f"retried {j['retries']}x")
+        if j["failovers"]:
+            hops.append(f"failed over {j['failovers']}x")
+        if hops:
+            lines.append("  " + ", ".join(hops))
+        if j["state"] == "done":
+            lines.append(f"  executed on {j['node']!r}, finished at "
+                         f"{j['finish_hour']:.6g} h")
+        elif j["finish_hour"] is not None:
+            lines.append(f"  terminal at {j['finish_hour']:.6g} h")
+        if j["e2e_h"] is not None:
+            s = 3600.0
+            lines.append(
+                f"  e2e {j['e2e_h'] * s:.4g} s = "
+                f"plan-defer {j['plan_defer_h'] * s:.4g} + "
+                f"queue {j['queue_wait_h'] * s:.4g} + "
+                f"budget-defer {j['budget_defer_h'] * s:.4g} + "
+                f"backoff {j['retry_backoff_h'] * s:.4g} + "
+                f"service {j['service_h'] * s:.4g}")
+        return "\n".join(lines)
+
+    def critical_path(self) -> Dict:
+        """Vectorized critical-path decomposition over every *completed*
+        journey: total and mean hours per phase, each phase's share of
+        end-to-end latency, and the max absolute residual of the
+        phase-sum identity (should be float-roundoff-sized)."""
+        u = self._u()
+        m = self.state[u] == J_DONE
+        u = u[m]
+        n = int(u.size)
+        if n == 0:
+            return {"journeys": 0}
+        service = self.finish[u] - self.start[u]
+        e2e = self.finish[u] - self.submit[u]
+        phases = {
+            "plan_defer": self.plan_defer_h[u],
+            "queue_wait": self.queue_wait_h[u],
+            "budget_defer": self.budget_defer_h[u],
+            "retry_backoff": self.retry_backoff_h[u],
+            "service": service,
+        }
+        e2e_total = float(np.add.accumulate(e2e)[-1])
+        out: Dict = {"journeys": n, "e2e_h_total": e2e_total}
+        acc = np.zeros(n)
+        for name, col in phases.items():
+            tot = float(np.add.accumulate(col)[-1])
+            out[f"{name}_h_total"] = tot
+            out[f"{name}_h_mean"] = tot / n
+            out[f"{name}_share"] = tot / e2e_total if e2e_total else 0.0
+            acc = acc + col
+        out["identity_max_abs_err_h"] = float(np.abs(acc - e2e).max())
+        return out
+
+    def state_counts(self) -> Dict[str, int]:
+        u = self._u()
+        counts = np.bincount(self.state[u], minlength=len(STATE_LABELS))
+        return {lbl: int(counts[i]) for i, lbl in enumerate(STATE_LABELS)}
+
+    def stats(self) -> Dict:
+        return {"journeys": self.max_uid,
+                "states": self.state_counts(),
+                "nbytes": self.nbytes,
+                "nodes": len(self._names["node"]),
+                "tenants": len(self._names["tenant"])}
+
+    def to_text(self) -> str:
+        """Deterministic per-journey rendering (``%.9g`` floats) — the
+        byte-comparison surface for the journey-determinism gate."""
+        u = self._u()
+        lines = []
+        for i in u.tolist():
+            nd, tn = int(self.node[i]), int(self.tenant[i])
+            lines.append(
+                f"uid={i} state={STATE_LABELS[int(self.state[i])]} "
+                f"submit={self.submit[i]:.9g} "
+                f"finish={self.finish[i]:.9g} "
+                f"plan={self.plan_defer_h[i]:.9g} "
+                f"queue={self.queue_wait_h[i]:.9g} "
+                f"budget={self.budget_defer_h[i]:.9g} "
+                f"backoff={self.retry_backoff_h[i]:.9g} "
+                f"drains={self.drains[i]} defers={self.defers[i]} "
+                f"retries={self.retries[i]} "
+                f"failovers={self.failovers[i]} "
+                f"node={self._names['node'][nd] if nd >= 0 else '-'} "
+                f"tenant={self._names['tenant'][tn] if tn >= 0 else '-'}")
+        return "\n".join(lines) + ("\n" if lines else "")

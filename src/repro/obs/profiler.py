@@ -10,6 +10,13 @@ The accumulator is O(1) per span (a dict lookup, four scalar updates, and
 one ``searchsorted`` into the shared edge vector); instrumented call sites
 guard every ``perf_counter`` pair behind a single ``is not None`` check so
 the disabled path pays one pointer comparison per phase.
+
+Quantiles inherit the histogram's bucket granularity: ``percentile_s``
+returns the *upper edge* of the bin holding the target rank (see the
+quantile-granularity contract in ``repro.obs.registry``), so a p50 of
+``0.0001`` means the median span fell in the ``(10^-4.5, 10^-4]`` s
+bin. Pass custom ``edges`` at construction when half-decade resolution
+is too coarse for a phase you care about.
 """
 from __future__ import annotations
 
@@ -28,32 +35,40 @@ SPAN_EDGES_S = 10.0 ** np.arange(-7.0, 1.5, 0.5)
 class _Phase:
     __slots__ = ("count", "total_s", "min_s", "max_s", "bins")
 
-    def __init__(self) -> None:
+    def __init__(self, n_bins: int) -> None:
         self.count = 0
         self.total_s = 0.0
         self.min_s = float("inf")
         self.max_s = 0.0
-        self.bins = np.zeros(SPAN_EDGES_S.size + 1, dtype=np.int64)
+        self.bins = np.zeros(n_bins, dtype=np.int64)
 
 
 class StepProfiler:
-    """Accumulate named wall-clock spans into per-phase histograms."""
+    """Accumulate named wall-clock spans into per-phase histograms.
 
-    def __init__(self) -> None:
+    ``edges`` (seconds, ascending) overrides the shared half-decade
+    :data:`SPAN_EDGES_S` — a caller-supplied resolution choice made at
+    construction, because bin counts cannot be re-binned afterwards."""
+
+    def __init__(self, edges=None) -> None:
+        self.edges = np.asarray(SPAN_EDGES_S if edges is None else edges,
+                                dtype=float)
+        if self.edges.ndim != 1 or self.edges.size == 0:
+            raise ValueError("edges must be a non-empty 1-D array")
         self._phases: Dict[str, _Phase] = {}
 
     def add(self, phase: str, dt_s: float) -> None:
         """Fold one span of ``dt_s`` seconds into ``phase``."""
         p = self._phases.get(phase)
         if p is None:
-            p = self._phases[phase] = _Phase()
+            p = self._phases[phase] = _Phase(self.edges.size + 1)
         p.count += 1
         p.total_s += dt_s
         if dt_s < p.min_s:
             p.min_s = dt_s
         if dt_s > p.max_s:
             p.max_s = dt_s
-        p.bins[int(np.searchsorted(SPAN_EDGES_S, dt_s, side="right"))] += 1
+        p.bins[int(np.searchsorted(self.edges, dt_s, side="right"))] += 1
 
     @contextmanager
     def span(self, phase: str):
@@ -84,9 +99,9 @@ class StepProfiler:
             return float("nan")
         cum = np.cumsum(p.bins)
         i = int(np.searchsorted(cum, q * p.count, side="left"))
-        if i >= SPAN_EDGES_S.size:
+        if i >= self.edges.size:
             return p.max_s
-        return float(SPAN_EDGES_S[i])
+        return float(self.edges[i])
 
     def summary(self) -> Dict:
         """JSON-ready per-phase aggregates plus the shared bin edges."""
@@ -103,7 +118,7 @@ class StepProfiler:
                 "p95_s": self.percentile_s(name, 0.95),
                 "hist": p.bins.tolist(),
             }
-        return {"edges_s": SPAN_EDGES_S.tolist(), "phases": phases}
+        return {"edges_s": self.edges.tolist(), "phases": phases}
 
     def reset(self) -> None:
         self._phases.clear()

@@ -8,9 +8,25 @@ the billing ledger fold — deterministic, loop-equivalent accumulation).
 ``to_text`` renders a Prometheus-style text exposition (``# HELP`` /
 ``# TYPE`` / cumulative ``_bucket`` rows) with the same ``%.9g`` float
 rendering the sim's byte-identity contract uses.
+
+Quantile-granularity contract
+-----------------------------
+Histograms store *bucket counts only*, never raw samples, so
+:meth:`Family.quantile` (and any downstream p50/p99) resolves to the
+**upper edge of the bucket containing the target rank** — exactly how a
+Prometheus ``histogram_quantile`` behaves. With the default log-spaced
+decade edges (:data:`DEFAULT_EDGES`) a reported p50 of ``0.0001`` means
+"the median sample fell in ``(1e-5, 1e-4]``", not that the median is
+exactly 100 µs; adjacent quantiles are indistinguishable within one
+bucket. Callers who need tighter resolution pass their own ``edges`` at
+``histogram(...)`` registration (e.g. half-decade ``10**arange(lo, hi,
+0.5)`` like the profiler, or linear edges around a known operating
+point) — resolution is a *registration-time* choice because bucket
+counts cannot be re-binned after the fact.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -118,6 +134,26 @@ class Family:
         self._bins[i] += np.bincount(which, minlength=self.edges.size + 1)
         self._sum[i] += float(v.sum())
         self.values[i] += v.size          # observation count
+
+    def quantile(self, q: float, labels: Tuple[str, ...] = ()) -> float:
+        """Histogram quantile snapped to the upper edge of the bucket
+        holding rank ``ceil(q * count)`` (see the module docstring's
+        quantile-granularity contract). Returns ``nan`` with no samples;
+        ``inf`` when the rank lands in the overflow (+Inf) bucket."""
+        if self.kind != "histogram":
+            raise ValueError(f"{self.name} is a {self.kind}, not histogram")
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q must be in [0, 1], got {q}")
+        i = self._index.get(tuple(labels))
+        if i is None:
+            return float("nan")
+        cum = np.cumsum(self._bins[i])
+        total = int(cum[-1])
+        if total == 0:
+            return float("nan")
+        rank = max(1, int(math.ceil(q * total)))
+        j = int(np.searchsorted(cum, rank))
+        return float(self.edges[j]) if j < self.edges.size else float("inf")
 
     # -- rendering -------------------------------------------------------
     @staticmethod

@@ -1,0 +1,247 @@
+"""Windowed rollups: bounded-memory sim-time series (DESIGN.md §12).
+
+``RollupStore`` folds the per-task columns the engine and driver already
+compute into fixed-width sim-time windows (``window_hours`` wide,
+anchored at hour 0): carbon grams, energy kWh, SLO miss counts, the
+admission-verdict mix, per-tenant carbon spend, and the fleet
+availability floor per window. A 10^6-client run exports O(windows)
+numbers, not O(tasks) — the windows grow by doubling with the furthest
+hour touched, never with task count.
+
+Feeding is split by layer so a hub shared between the engine and the
+driver never double-counts: the **engine** folds executed carbon/energy,
+the verdict mix, and per-tenant spend (``_obs_record_step`` /
+``_obs_record_tenancy``); the **driver** folds SLO misses (it alone
+knows queueing latency) and availability transitions (it alone sees
+fault events). Every fold is a deterministic scatter
+(``np.add.at``-style unbuffered accumulation in input order) or a
+sequential ``np.add.accumulate`` sum, so two same-seed runs — and the
+batched vs scalar execute paths, and the calendar vs heap event queues —
+produce bit-identical rollups (asserted by ``gate_obs``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+# Verdict-mix column order == repro.obs.trace.VERDICT_LABELS.
+VERDICT_COLS = ("done", "reject", "defer", "dead", "retry")
+
+_GROW_MIN = 64
+
+
+def _seq_sum(x) -> float:
+    """Strict left-fold sum (bit-identical to a scalar ``+=`` loop)."""
+    x = np.asarray(x, dtype=float)
+    return float(np.add.accumulate(x)[-1]) if x.size else 0.0
+
+
+class RollupStore:
+    """Fixed-width sim-time windows over the run's metric columns."""
+
+    def __init__(self, window_hours: float = 0.25) -> None:
+        if window_hours <= 0:
+            raise ValueError("window_hours must be > 0")
+        self.window_hours = float(window_hours)
+        self._last_window = -1            # highest window index touched
+        self._tenant_idx: Dict[str, int] = {}
+        self._tenant_names: List[str] = []
+        cap = _GROW_MIN
+        self.tasks = np.zeros(cap, dtype=np.int64)
+        self.carbon_g = np.zeros(cap)
+        self.energy_kwh = np.zeros(cap)
+        self.slo_miss = np.zeros(cap, dtype=np.int64)
+        self.verdicts = np.zeros((cap, len(VERDICT_COLS)), dtype=np.int64)
+        self.avail_min = np.full(cap, np.nan)   # nan = no transition seen
+        self.tenant_spend = np.zeros((0, cap))  # (tenants, windows)
+        self._avail_last = 1.0                  # forward-fill state
+
+    # ------------------------------------------------------------------
+    # geometry / growth
+    # ------------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.tasks.size
+
+    @property
+    def n_windows(self) -> int:
+        """Windows actually touched (index 0..n_windows-1)."""
+        return self._last_window + 1
+
+    @property
+    def nbytes(self) -> int:
+        return (self.tasks.nbytes + self.carbon_g.nbytes
+                + self.energy_kwh.nbytes + self.slo_miss.nbytes
+                + self.verdicts.nbytes + self.avail_min.nbytes
+                + self.tenant_spend.nbytes)
+
+    def window_of(self, hour: float) -> int:
+        return int(hour // self.window_hours)
+
+    def _grow_to(self, w: int) -> None:
+        if w > self._last_window:
+            self._last_window = w
+        have = self.capacity
+        if w < have:
+            return
+        new = max(w + 1, 2 * have, _GROW_MIN)
+        pad = new - have
+
+        def _ext(a, fill=0.0):
+            return np.concatenate(
+                [a, np.full(pad, fill, dtype=a.dtype)])
+
+        self.tasks = _ext(self.tasks)
+        self.carbon_g = _ext(self.carbon_g)
+        self.energy_kwh = _ext(self.energy_kwh)
+        self.slo_miss = _ext(self.slo_miss)
+        self.avail_min = _ext(self.avail_min, np.nan)
+        self.verdicts = np.concatenate(
+            [self.verdicts,
+             np.zeros((pad, len(VERDICT_COLS)), dtype=np.int64)])
+        if self.tenant_spend.size or self._tenant_names:
+            self.tenant_spend = np.concatenate(
+                [self.tenant_spend,
+                 np.zeros((self.tenant_spend.shape[0], pad))], axis=1)
+
+    def tenant_row(self, name: str) -> int:
+        i = self._tenant_idx.get(name)
+        if i is None:
+            i = self._tenant_idx[name] = len(self._tenant_names)
+            self._tenant_names.append(name)
+            self.tenant_spend = np.concatenate(
+                [self.tenant_spend, np.zeros((1, self.capacity))], axis=0)
+        return i
+
+    def intern_tenants(self, names) -> np.ndarray:
+        """Rows for an array of tenant names (pass distinct names)."""
+        return np.fromiter((self.tenant_row(str(n)) for n in names),
+                           dtype=np.int64, count=len(names))
+
+    def tenant_names(self) -> List[str]:
+        return list(self._tenant_names)
+
+    # ------------------------------------------------------------------
+    # folds (engine side)
+    # ------------------------------------------------------------------
+    def fold_exec(self, hour: float, carbon_g, energy_kwh) -> None:
+        """One executed batch: carbon/energy sums into ``hour``'s window
+        (sequential fold — bit-identical across execute paths)."""
+        w = self.window_of(hour)
+        self._grow_to(w)
+        n = np.asarray(carbon_g).size
+        self.tasks[w] += n
+        self.carbon_g[w] += _seq_sum(carbon_g)
+        self.energy_kwh[w] += _seq_sum(energy_kwh)
+
+    def fold_verdicts(self, hour: float, counts) -> None:
+        """Admission/outcome mix for one step: ``counts`` is a length-5
+        vector in :data:`VERDICT_COLS` order."""
+        w = self.window_of(hour)
+        self._grow_to(w)
+        self.verdicts[w] += np.asarray(counts, dtype=np.int64)
+
+    def fold_tenant_spend(self, hour: float, tenant_rows, carbon_g) -> None:
+        """Executed carbon per tenant (rows from :meth:`tenant_row`),
+        scattered unbuffered so repeated rows accumulate in order."""
+        rows = np.asarray(tenant_rows, dtype=np.int64)
+        if rows.size == 0:
+            return
+        w = self.window_of(hour)
+        self._grow_to(w)
+        np.add.at(self.tenant_spend[:, w], rows,
+                  np.asarray(carbon_g, dtype=float))
+
+    # ------------------------------------------------------------------
+    # folds (driver side)
+    # ------------------------------------------------------------------
+    def fold_slo(self, finish_hours, miss_mask) -> None:
+        """SLO misses scattered by each task's finish-hour window. The
+        span always grows to the latest finish (miss or not) so the
+        exported series covers every window tasks completed in."""
+        h = np.asarray(finish_hours, dtype=float)
+        if h.size == 0:
+            return
+        self._grow_to(int(h.max() // self.window_hours))
+        miss = np.asarray(miss_mask, dtype=bool)
+        if not miss.any():
+            return
+        w = (h[miss] // self.window_hours).astype(np.int64)
+        np.add.at(self.slo_miss, w, 1)
+
+    def note_availability(self, hour: float, frac: float) -> None:
+        """A fleet-availability transition at ``hour`` (down-set changed):
+        per-window minimum, forward-filled at export."""
+        w = self.window_of(hour)
+        self._grow_to(w)
+        cur = self.avail_min[w]
+        self.avail_min[w] = frac if np.isnan(cur) else min(cur, frac)
+        self._avail_last = frac
+
+    # ------------------------------------------------------------------
+    # export
+    # ------------------------------------------------------------------
+    def availability(self) -> np.ndarray:
+        """Per-window availability floor, forward-filled from 1.0:
+        a window with no transition inherits the last known level."""
+        n = self.n_windows
+        out = np.empty(n)
+        level = 1.0
+        raw = self.avail_min[:n]
+        for i in range(n):            # O(windows), not O(events)
+            if not np.isnan(raw[i]):
+                level = raw[i]
+            out[i] = level
+        return out
+
+    def export(self) -> Dict:
+        """JSON-ready O(windows) series, trimmed to windows touched."""
+        n = self.n_windows
+        out: Dict = {
+            "window_hours": self.window_hours,
+            "n_windows": n,
+            "tasks": self.tasks[:n].tolist(),
+            "carbon_g": self.carbon_g[:n].tolist(),
+            "energy_kwh": self.energy_kwh[:n].tolist(),
+            "slo_miss": self.slo_miss[:n].tolist(),
+            "availability": self.availability().tolist(),
+        }
+        for j, lbl in enumerate(VERDICT_COLS):
+            out[f"verdict_{lbl}"] = self.verdicts[:n, j].tolist()
+        if self._tenant_names:
+            out["tenant_spend_g"] = {
+                name: self.tenant_spend[i, :n].tolist()
+                for name, i in sorted(self._tenant_idx.items())}
+        return out
+
+    def stats(self) -> Dict:
+        n = self.n_windows
+        return {"windows": n,
+                "window_hours": self.window_hours,
+                "tasks": int(self.tasks[:n].sum()),
+                "carbon_g": _seq_sum(self.carbon_g[:n]),
+                "slo_miss": int(self.slo_miss[:n].sum()),
+                "tenants": len(self._tenant_names),
+                "nbytes": self.nbytes}
+
+    def to_text(self) -> str:
+        """Deterministic per-window rendering (``%.9g`` floats) — the
+        byte-comparison surface for the rollup-determinism gate."""
+        n = self.n_windows
+        avail = self.availability()
+        lines = []
+        for w in range(n):
+            v = " ".join(f"{lbl}={self.verdicts[w, j]}"
+                         for j, lbl in enumerate(VERDICT_COLS))
+            spend = " ".join(
+                f"spend[{name}]={self.tenant_spend[i, w]:.9g}"
+                for name, i in sorted(self._tenant_idx.items()))
+            lines.append(
+                f"w={w} tasks={self.tasks[w]} "
+                f"carbon_g={self.carbon_g[w]:.9g} "
+                f"energy_kwh={self.energy_kwh[w]:.9g} "
+                f"slo_miss={self.slo_miss[w]} "
+                f"avail={avail[w]:.9g} {v}"
+                + (f" {spend}" if spend else ""))
+        return "\n".join(lines) + ("\n" if lines else "")

@@ -204,12 +204,26 @@ class DecisionTrace:
         lines = [json.dumps(r, sort_keys=True) for r in self.rows()]
         return "\n".join(lines) + ("\n" if lines else "")
 
-    def export_jsonl(self, path: str) -> int:
-        """Write :meth:`to_jsonl` to ``path``; returns the row count."""
-        text = self.to_jsonl()
-        with open(path, "w") as fh:
-            fh.write(text)
-        return len(self)
+    def export_jsonl(self, path: str, *, append: bool = False,
+                     chunk_rows: int = 4096) -> int:
+        """Stream the trace to ``path`` one ``chunk_rows`` buffer at a
+        time; returns the row count. Peak memory is O(chunk_rows), not
+        O(rows), so a 10^7-task export never materializes the full
+        string. Each line is byte-identical to the corresponding
+        :meth:`to_jsonl` line (oldest-first, sorted keys, NaN/Inf ->
+        null). ``append=True`` opens in append mode for incremental
+        drain-and-export loops."""
+        n = len(self)
+        with open(path, "a" if append else "w") as fh:
+            buf: List[str] = []
+            for i in range(n):
+                buf.append(json.dumps(self.row(i), sort_keys=True))
+                if len(buf) >= chunk_rows:
+                    fh.write("\n".join(buf) + "\n")
+                    buf = []
+            if buf:
+                fh.write("\n".join(buf) + "\n")
+        return n
 
     # ------------------------------------------------------------------
     # aggregates

@@ -91,5 +91,14 @@ class Resilience:
         return min(self.backoff_base_hours * (2.0 ** max(0, attempt - 1)),
                    self.backoff_cap_hours)
 
+    def availability(self, n_nodes: int) -> float:
+        """Ground-truth fleet availability fraction: the share of
+        ``n_nodes`` not currently in :attr:`down`. The sim driver folds
+        this into the rollup windows on every fault transition
+        (DESIGN.md §12)."""
+        if n_nodes <= 0:
+            return 1.0
+        return 1.0 - len(self.down) / float(n_nodes)
+
     def report(self) -> Dict:
         return {"down": sorted(self.down), "health": self.health.report()}

@@ -53,6 +53,7 @@ from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
 
 import numpy as np
 
+from repro.obs.journey import PARK_DEFER, PARK_RETRY
 from repro.sim.arrivals import ArrivalProcess, ClosedLoopClientPool
 from repro.sim.clock import VirtualClock, hours_to_s, ms_to_hours, s_to_hours
 from repro.sim.events import (KIND_CODE, EventCalendar, EventHeap, EventKind)
@@ -214,12 +215,16 @@ class AsyncEngineDriver:
         # factory signature (ARRIVAL events pass tenant=""). New requests
         # stop at the horizon; in-flight ones drain.
         self.clients = clients
-        # Observability (DESIGN.md §9): spans around the step/record/plan
-        # phases of each event batch plus per-EventKind counters. Off
-        # (None / disabled) leaves the event loop byte-identical — every
-        # hook sits behind a single `is not None` check. Pass the same
-        # Observability to the engine and the driver to get one unified
-        # profiler/registry across both layers.
+        # Observability (DESIGN.md §9, §12): spans around the
+        # step/record/plan phases of each event batch plus per-EventKind
+        # counters; the journeys pillar records each uid's causal path at
+        # the enqueue/drain/outcome hooks, and the rollups pillar gets the
+        # driver-side folds (SLO misses, availability — the engine folds
+        # carbon/energy/verdicts/tenant spend, so sharing one hub between
+        # both layers never double-counts). Off (None / disabled) leaves
+        # the event loop byte-identical — every hook sits behind a single
+        # `is not None` check. Pass the same Observability to the engine
+        # and the driver to get one unified view across both layers.
         self.obs = obs if obs is not None and obs.enabled else None
         # Fault injection (DESIGN.md §10): a repro.resilience.FaultInjector
         # whose schedule is surfaced as NODE_DOWN/NODE_UP/PROVIDER_OUTAGE
@@ -282,6 +287,9 @@ class AsyncEngineDriver:
         self.executor.submit(task)
         self._pending.append(_Pending(uid, submit_hour, deferred_hours,
                                       getattr(task, "tenant", ""), client))
+        jt = self.obs.journeys if self.obs is not None else None
+        if jt is not None:
+            jt.enqueue((uid,), now)
         if len(self._pending) >= self.max_batch:
             # Flush immediately, even past an already-scheduled window
             # flush — the superseded event then drains whatever is
@@ -313,6 +321,9 @@ class AsyncEngineDriver:
         tenants = [getattr(task, "tenant", "") for task in tasks]
         pend0 = len(self._pending)
         self._pending.append_arrays(uids, times, tenants, client_ids)
+        jt = self.obs.journeys if self.obs is not None else None
+        if jt is not None:
+            jt.enqueue(uids, times)
         k = len(tasks)
         # window flush: armed while processing the run's first event
         # (pend0 + 1 < max_batch is guaranteed by pop_run's room limit);
@@ -335,8 +346,13 @@ class AsyncEngineDriver:
         # attached (open-loop arrivals are the untenanted source)
         task = (self.task_factory(uid, now) if self.clients is None
                 else self.task_factory(uid, now, ""))
+        jt = self.obs.journeys if self.obs is not None else None
+        if jt is not None:
+            jt.begin((uid,), now)
         wake = self._plan(task, now)
         if wake > now + 1e-12:
+            if jt is not None:
+                jt.plan_defer(uid, wake - now)
             self.heap.push(wake, EventKind.DEFER_WAKE,
                            payload=(uid, task, now, wake - now))
         else:
@@ -356,6 +372,9 @@ class AsyncEngineDriver:
         else:
             tasks = [factory(u, h, "")
                      for u, h in zip(uids.tolist(), times.tolist())]
+        jt = self.obs.journeys if self.obs is not None else None
+        if jt is not None:
+            jt.begin(uids, times)
         self._enqueue_batch(tasks, uids, times, None)
 
     def _on_client_ready(self, client_id: int, now: float,
@@ -375,6 +394,9 @@ class AsyncEngineDriver:
         uid = self._uid
         tenant = self.clients.on_ready(client_id)
         task = self.task_factory(uid, now, tenant)
+        jt = self.obs.journeys if self.obs is not None else None
+        if jt is not None:
+            jt.begin((uid,), now)
         self._enqueue(uid, task, now, 0.0, now, client=client_id)
 
     def _on_clients_batch(self, times: np.ndarray, ids: np.ndarray,
@@ -403,6 +425,9 @@ class AsyncEngineDriver:
         tasks = [factory(u, h, tnames[c])
                  for u, h, c in zip(uids.tolist(), times.tolist(),
                                     tcodes.tolist())]
+        jt = self.obs.journeys if self.obs is not None else None
+        if jt is not None:
+            jt.begin(uids, times)
         self._enqueue_batch(tasks, uids, times, ids)
 
     def _client_verdict(self, client_id: int, verdict: str,
@@ -439,17 +464,28 @@ class AsyncEngineDriver:
         # engine.step use, or a reused engine) have no parked record of
         # ours; they precede our own in the lot's FIFO, so the unmatched
         # head is exactly them — adopt each with a fresh uid at the wake.
+        jt = self.obs.journeys if self.obs is not None else None
         extra = len(ripe) - len(take)
+        adopted: List[int] = []
         for task in ripe[:extra]:
             self._uid += 1
             self.executor.submit(task)
             self._pending.append(_Pending(self._uid, now, 0.0,
                                           getattr(task, "tenant", ""),
                                           None))
+            adopted.append(self._uid)
         for task, (wake, parked_at, p) in zip(ripe[extra:], take):
             self.executor.submit(task)
             p.deferred_hours += now - parked_at
             self._pending.append(p)
+        if jt is not None:
+            if adopted:
+                jt.begin(adopted, now)
+                jt.enqueue(adopted, now)
+            if take:
+                woke = [p.uid for _, _, p in take]
+                jt.wake(woke, now)
+                jt.enqueue(woke, now)
         if len(self._pending) >= self.max_batch:
             self._schedule_flush(now)
         else:
@@ -485,10 +521,22 @@ class AsyncEngineDriver:
             outcomes = [("done", r) for r in results]
         done, free = self._pending.take_list(len(outcomes)), exec_hour
         pool = self.clients
+        obs = self.obs
+        jt = obs.journeys if obs is not None else None
+        roll = obs.rollups if obs is not None else None
+        # per-verdict journey/rollup gathers, scattered batched after the
+        # loop (the loop itself is the pre-existing scalar record path)
+        j_rej: List[tuple] = []              # (uid, tenant)
+        j_defer: List[int] = []
+        j_retry: List[int] = []
+        j_dead: List[tuple] = []             # (uid, tenant)
+        j_done: List[tuple] = []             # (uid, finish, node, tenant, sub)
         t = exec_hour
         for p, (kind, val) in zip(done, outcomes):
             if kind == "reject":
                 self.metrics.count_rejected(p.tenant)
+                if jt is not None:
+                    j_rej.append((p.uid, p.tenant))
                 if pool is not None and p.client is not None:
                     verdict, at = pool.on_reject(p.client, exec_hour)
                     self._client_verdict(p.client, verdict, at, p.tenant)
@@ -496,6 +544,8 @@ class AsyncEngineDriver:
             if kind == "defer" or kind == "retry":
                 # a resilience retry parks on the executor exactly like a
                 # budget deferral: wake at `val`, resubmit, re-plan
+                if jt is not None:
+                    (j_defer if kind == "defer" else j_retry).append(p.uid)
                 self._parked.append((val, exec_hour, p))
                 self.heap.push(val, EventKind.DEFER_WAKE, payload=None)
                 continue
@@ -503,6 +553,8 @@ class AsyncEngineDriver:
                 # dead letter (DESIGN.md §10): the executor consumed the
                 # task permanently; a closed-loop client sees a rejection
                 self.metrics.count_dead(p.tenant)
+                if jt is not None:
+                    j_dead.append((p.uid, p.tenant))
                 if pool is not None and p.client is not None:
                     verdict, at = pool.on_reject(p.client, exec_hour)
                     self._client_verdict(p.client, verdict, at, p.tenant)
@@ -527,10 +579,42 @@ class AsyncEngineDriver:
                 energy_kwh=energy,
                 deferred_hours=p.deferred_hours, tenant=p.tenant)
             self.metrics.add(rec)
+            if jt is not None or roll is not None:
+                j_done.append((p.uid, finish, rec.node, p.tenant,
+                               p.submit_hour))
             if pool is not None and p.client is not None:
                 verdict, at = pool.on_complete(p.client, rec.latency_s,
                                                finish)
                 self._client_verdict(p.client, verdict, at, p.tenant)
+        if jt is not None:
+            if j_rej:
+                jt.reject([u for u, _ in j_rej], exec_hour,
+                          jt.intern_tenants([tn for _, tn in j_rej]))
+            if j_defer:
+                jt.park(j_defer, exec_hour, PARK_DEFER)
+            if j_retry:
+                jt.park(j_retry, exec_hour, PARK_RETRY)
+            if j_dead:
+                jt.dead([u for u, _ in j_dead], exec_hour,
+                        jt.intern_tenants([tn for _, tn in j_dead]))
+            if j_done:
+                jt.done([e[0] for e in j_done], exec_hour,
+                        [e[1] for e in j_done],
+                        node_ids=jt.intern_names([e[2] for e in j_done]),
+                        tenant_ids=jt.intern_tenants(
+                            [e[3] for e in j_done]))
+            fo = getattr(self.executor, "last_failover_pos", None)
+            if fo:
+                jt.failover([done[i].uid for i in fo])
+        if roll is not None and j_done:
+            base = (self.metrics.slo_latency_s
+                    if self.metrics.slo_latency_s is not None
+                    else float("inf"))
+            fins = np.asarray([e[1] for e in j_done])
+            subs = np.asarray([e[4] for e in j_done])
+            thr = np.asarray([self.metrics.tenant_slo_s.get(e[3], base)
+                              for e in j_done])
+            roll.fold_slo(fins, (fins - subs) * 3600.0 > thr)
         return free
 
     def _record_batch_vec(self, results: Sequence,
@@ -566,6 +650,22 @@ class AsyncEngineDriver:
                                    np.int64, n)
         metrics.add_batch(uids, subs, exec_hour, finishes, node_codes,
                           c_g, e_kwh, defs, tenant_codes)
+        obs = self.obs
+        jt = obs.journeys if obs is not None else None
+        roll = obs.rollups if obs is not None else None
+        if jt is not None:
+            if snap is not None and len(snap[2]) == n:
+                node_ids = jt.intern_names(uniq)[inverse]
+            else:
+                node_ids = jt.intern_names(
+                    [getattr(r, "node", getattr(r, "pod", ""))
+                     for r in results])
+            jt.done(uids, exec_hour, finishes, node_ids=node_ids,
+                    tenant_ids=jt.intern_tenants(tenants))
+        if roll is not None:
+            thr = metrics.slo_for_codes()
+            roll.fold_slo(finishes,
+                          (finishes - subs) * 3600.0 > thr[tenant_codes])
         pool = self.clients
         if pool is not None:
             pos = np.flatnonzero(clis >= 0)
@@ -677,6 +777,13 @@ class AsyncEngineDriver:
               or ev.kind is EventKind.NODE_UP
               or ev.kind is EventKind.PROVIDER_OUTAGE):
             self.faults.apply(ev.payload, self.executor)
+            roll = self.obs.rollups if self.obs is not None else None
+            if roll is not None:
+                res = getattr(self.executor, "resilience", None)
+                cluster = getattr(self.executor, "cluster", None)
+                if res is not None and cluster is not None and cluster.nodes:
+                    roll.note_availability(
+                        now, res.availability(len(cluster.nodes)))
 
     def _run_loop_calendar(self, ev_counts: Optional[Dict[str, int]]) -> None:
         """The O(batches) event loop (DESIGN.md §11): a same-kind run of
@@ -809,4 +916,23 @@ class AsyncEngineDriver:
             for k in sorted(ev_counts):
                 fam.inc(ev_counts[k], (k,))
             self.metrics.export_obs(self.obs.metrics)
+        # Alert evaluation (DESIGN.md §12): one vectorized pass over the
+        # run's complete rollup windows. With no rules configured, default
+        # fleet rules plus the tenant policy's per-tenant carbon-pace
+        # rules (when the executor carries one) are installed first.
+        obs = self.obs
+        if (obs is not None and obs.alerts is not None
+                and obs.rollups is not None):
+            alerts = obs.alerts
+            if not alerts.rules:
+                from repro.obs.alerts import default_rules
+                rules = default_rules()
+                mk = getattr(getattr(self.executor, "policy", None),
+                             "alert_rules", None)
+                if mk is not None:
+                    rules += mk(obs.rollups.window_hours)
+                alerts.add_rules(rules)
+            alerts.evaluate(obs.rollups)
+            if obs.metrics is not None:
+                alerts.export(obs.metrics)
         return self.metrics

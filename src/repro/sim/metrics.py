@@ -338,6 +338,27 @@ class MetricsCollector:
             }
         return out
 
+    def slo_for_codes(self) -> np.ndarray:
+        """Per interned-name-code SLO latency threshold (seconds): a
+        tenant's own class target when declared, the collector-wide
+        ``slo_latency_s`` otherwise, ``inf`` with no SLO at all. The
+        driver indexes this with a batch's tenant codes to scatter
+        windowed miss counts into a RollupStore without per-task dict
+        lookups (DESIGN.md §12). Cached until the intern table grows."""
+        n = len(self._names)
+        cached = getattr(self, "_slo_cache", None)
+        if cached is not None and cached[0] == n:
+            return cached[1]
+        base = (self.slo_latency_s if self.slo_latency_s is not None
+                else float("inf"))
+        out = np.full(n, base)
+        for name, s in self.tenant_slo_s.items():
+            code = self._name_idx.get(name)
+            if code is not None:
+                out[code] = s
+        self._slo_cache = (n, out)
+        return out
+
     # -- obs bridge (DESIGN.md §9) ------------------------------------------
     def export_obs(self, registry) -> None:
         """Fold this collector into an obs :class:`MetricsRegistry`:

@@ -144,6 +144,28 @@ class TenantPolicy:
     def register(self, spec: TenantSpec) -> TenantSpec:
         return self.registry.register(spec)
 
+    def alert_rules(self, window_hours: float):
+        """Per-tenant carbon-pace alert rules for the obs alerting engine
+        (DESIGN.md §12): a tenant burning faster than
+        ``allowance_g * window_hours / period_hours`` per rollup window is
+        on pace to exhaust its budget before the period rolls. Tenants
+        with infinite allowances or everlasting periods get no rule.
+        Deterministically ordered by tenant name."""
+        from repro.obs.alerts import AlertRule
+        reg = self.registry
+        rules = []
+        for name in sorted(reg.index):
+            i = reg.index[name]
+            allow = float(reg.allowance_g[i])
+            period = float(reg.period_hours[i])
+            if not (np.isfinite(allow) and np.isfinite(period)):
+                continue
+            rules.append(AlertRule(
+                name=f"carbon_pace[{name}]", kind="carbon_pace",
+                threshold=allow * float(window_hours) / period,
+                tenant=name))
+        return rules
+
     # -- observability passthrough (DESIGN.md §9) --------------------------
     @property
     def capture_scores(self) -> bool:
